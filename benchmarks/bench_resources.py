@@ -1,0 +1,105 @@
+"""Table III analogue: resource cost of each sparsity format on TPU.
+
+The paper reports FPGA LUT/FF/DSP increments (<5% LUTs, 0 BRAM, +1 DSP).
+The TPU-resource analogue per format, for a representative (4096, 4096)
+weight at its natural sparsity:
+
+  * values bytes (HBM)        — the weight payload the kernel streams
+  * metadata bytes (HBM/SMEM) — index lists / nibble positions; the
+    lookahead format's headline property is 0 extra bytes
+  * VMEM working set          — per-grid-step tiles the kernel holds
+  * FLOP fraction vs dense    — compute the format actually issues
+
+Mirrors the paper's "small amount of additional resources" claim: every
+format's metadata is <5% of values, and the faithful lookahead format is
+exactly 0%.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analytical, pruning, sparsity
+from repro.core.sparse_linear import SparsityConfig, sparsify_weight
+
+K = N = 4096
+BM = BK = BN = 128
+
+
+def vmem_working_set(fmt: str, cfg: SparsityConfig) -> int:
+    """Bytes resident in VMEM per grid step (x tile + w tile + acc)."""
+    if fmt in ("dense", "lookahead"):
+        wt = BK * BN * (2 if fmt == "dense" else 1)   # bf16 vs int8
+        return BM * BK * 2 + wt + BM * BN * 4
+    if fmt == "block":
+        return BM * BK * 2 + BK * BN * 2 + BM * BN * 4
+    if fmt == "nm":
+        bk_src = BK * cfg.m // cfg.n
+        return BM * bk_src * 2 + BK * BN * 2 + BK * 4 + BM * BN * 4
+    if fmt == "combined":
+        bkc = BK * cfg.n // cfg.m
+        return BM * BK * 2 + bkc * BN * 2 + bkc * 4 + BM * BN * 4
+    raise ValueError(fmt)
+
+
+def run() -> dict:
+    rng = jax.random.key(0)
+    w = jax.random.normal(rng, (K, N), jnp.float32)
+    dense_bytes = K * N * 2          # bf16 reference
+    rows = []
+    fmts = {
+        "dense": SparsityConfig(format="dense"),
+        "lookahead": SparsityConfig(format="lookahead", sparsity=0.5),
+        "block": SparsityConfig(format="block", sparsity=0.5,
+                                block_k=BK, block_n=BN),
+        "nm": SparsityConfig(format="nm", n=2, m=4, block_n=BN),
+        "combined": SparsityConfig(format="combined", sparsity=0.5,
+                                   n=2, m=4, block_k=BK, block_n=BN),
+    }
+    for fmt, cfg in fmts.items():
+        pack = sparsify_weight(w, cfg)
+        if fmt == "dense":
+            vals, meta = dense_bytes, 0
+            flop_frac = 1.0
+        else:
+            vals = sparsity.values_bytes(pack)
+            meta = sparsity.metadata_bytes(pack)
+            flop_frac = {
+                "lookahead": 1.0,     # storage-optimal, not compute-skipping
+                "block": analytical.block_speedup_tile(0.5) ** -1,
+                "nm": analytical.nm_flop_fraction(2, 4),
+                "combined": analytical.combined_flop_fraction(0.5, 2, 4),
+            }[fmt]
+        rows.append({
+            "format": fmt,
+            "values_bytes": vals,
+            "metadata_bytes": meta,
+            "meta_pct_of_values": 100.0 * meta / max(vals, 1),
+            "vmem_bytes": vmem_working_set(fmt, cfg),
+            "flop_fraction": flop_frac,
+        })
+    return {"rows": rows}
+
+
+def main() -> None:
+    out = run()
+    print("# Table III analogue — per-format TPU resource costs "
+          f"({K}x{N} weight, 50% sparsity / 2:4)")
+    print("format,values_MB,metadata_KB,meta_pct,vmem_KB,flop_fraction")
+    for r in out["rows"]:
+        print(f"{r['format']},{r['values_bytes']/2**20:.2f},"
+              f"{r['metadata_bytes']/2**10:.1f},"
+              f"{r['meta_pct_of_values']:.2f},"
+              f"{r['vmem_bytes']/2**10:.1f},{r['flop_fraction']:.2f}")
+    la = next(r for r in out["rows"] if r["format"] == "lookahead")
+    small = all(r["meta_pct_of_values"] < 5.0 for r in out["rows"])
+    print(f"lookahead metadata bytes == 0 (paper's headline): "
+          f"{'PASS' if la['metadata_bytes'] == 0 else 'FAIL'}")
+    print(f"all formats metadata <5% of values (paper: <5% LUT increase): "
+          f"{'PASS' if small else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

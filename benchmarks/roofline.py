@@ -1,0 +1,111 @@
+"""Roofline table (deliverable g): aggregates results/dryrun/*.json.
+
+Per (arch × shape × mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS / program-FLOPs (useful-compute ratio), the
+roofline fraction (useful FLOPs ÷ what the bound step could do at peak),
+and memory-fit status.  Emits both CSV (stdout) and the markdown table
+EXPERIMENTS.md embeds.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_GB = 16
+
+
+def load(out_dir: str = "") -> List[dict]:
+    if not out_dir:
+        # prefer the optimized matrix, fall back to the scratch dir
+        out_dir = ("results/dryrun_opt"
+                   if glob.glob("results/dryrun_opt/*/*.json")
+                   else "results/dryrun")
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*", "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("ok"):
+            r["mesh_name"] = os.path.basename(os.path.dirname(path))
+            recs.append(r)
+    return recs
+
+
+def row_of(r: dict) -> dict:
+    rl = r["roofline"]
+    bound = rl["bound_step_s"]
+    # roofline fraction: useful model FLOPs per chip per bound-step,
+    # against the chip's peak
+    useful = rl["model_flops"] / r["chips"]
+    frac = useful / (bound * PEAK_FLOPS) if bound > 0 else 0.0
+    return {
+        "arch": r["arch"], "cell": r["cell"], "mesh": r["mesh_name"],
+        "chips": r["chips"],
+        "t_comp_ms": rl["t_compute_s"] * 1e3,
+        "t_mem_ms": rl["t_memory_s"] * 1e3,
+        "t_coll_ms": rl["t_collective_s"] * 1e3,
+        "dominant": rl["dominant"],
+        "useful_ratio": rl["useful_flop_ratio"],
+        "roofline_frac": frac,
+        "mem_gib": r["memory"]["total_per_device"] / 2**30,
+        "fits": r["memory"]["total_per_device"] < HBM_GB * 2**30,
+        "compile_s": r["compile_s"],
+    }
+
+
+def one_liner(r: dict) -> str:
+    """What would move the dominant term down (per §Roofline)."""
+    d = r["dominant"]
+    if d == "collective":
+        return ("cut TP/EP boundary traffic: reshard activations, bf16 "
+                "collectives, or trade model- for data-parallel work")
+    if d == "memory":
+        return ("cut HBM traffic: larger microbatches per weight load, "
+                "fuse/shrink temps, quantize cache or weights")
+    return "raise MXU utilization: bigger tiles / fewer small ops"
+
+
+def main() -> None:
+    recs = load()
+    if not recs:
+        print("no dry-run records found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    rows = [row_of(r) for r in recs]
+    print("# roofline table (per arch × cell × mesh; times per step)")
+    print("arch,cell,mesh,chips,t_comp_ms,t_mem_ms,t_coll_ms,dominant,"
+          "useful_flop_ratio,roofline_frac,mem_GiB,fits_16GiB")
+    for r in rows:
+        print(f"{r['arch']},{r['cell']},{r['mesh']},{r['chips']},"
+              f"{r['t_comp_ms']:.2f},{r['t_mem_ms']:.2f},"
+              f"{r['t_coll_ms']:.2f},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['roofline_frac']:.4f},"
+              f"{r['mem_gib']:.2f},{int(r['fits'])}")
+    n_fit = sum(r["fits"] for r in rows)
+    by_dom: Dict[str, int] = {}
+    for r in rows:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    print(f"cells: {len(rows)}  fit<16GiB: {n_fit}  bottlenecks: {by_dom}")
+
+
+def markdown(out_dir: str = "") -> str:
+    rows = [row_of(r) for r in load(out_dir)]
+    lines = ["| arch | cell | mesh | T_comp (ms) | T_mem (ms) | "
+             "T_coll (ms) | dominant | useful ratio | roofline frac | "
+             "GiB/chip |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
+            f"{r['t_comp_ms']:.1f} | {r['t_mem_ms']:.1f} | "
+            f"{r['t_coll_ms']:.1f} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.4f} | "
+            f"{r['mem_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    main()

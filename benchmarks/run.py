@@ -1,0 +1,40 @@
+"""Benchmark aggregator: one section per paper table/figure + the
+roofline report.  ``PYTHONPATH=src python -m benchmarks.run``"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SECTIONS = [
+    ("fig8_ussa", "benchmarks.bench_ussa"),
+    ("fig9_sssa", "benchmarks.bench_sssa"),
+    ("fig10_csa_models", "benchmarks.bench_csa_models"),
+    ("table2_int7", "benchmarks.bench_int7"),
+    ("table3_resources", "benchmarks.bench_resources"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> int:
+    import importlib
+    failures = 0
+    for name, module in SECTIONS:
+        print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
+        t0 = time.time()
+        try:
+            importlib.import_module(module).main()
+            print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"[{name}] FAILED", flush=True)
+    print(f"\n{len(SECTIONS)-failures}/{len(SECTIONS)} benchmark "
+          "sections succeeded")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from repro.checkpoint.store import (  # noqa: F401
+    CheckpointManager, load_checkpoint, restore_latest, save_checkpoint)

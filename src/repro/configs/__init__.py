@@ -1,0 +1,88 @@
+"""Config registry: one module per assigned architecture (+ paper CNNs).
+
+Every module exposes:
+  ``config()``   — the exact full-size ModelConfig from the assignment
+  ``reduced()``  — same family, smoke-test size (CPU-runnable in seconds)
+
+Shape cells (the assignment's 4 per arch) are defined here once;
+``cells_for`` applies the skip rules:
+  * ``long_500k`` only for sub-quadratic archs (mamba2, zamba2, gemma3 —
+    see DESIGN.md §5 for the gemma2 1:1-alternating exclusion rationale);
+  * no assigned arch is encoder-only, so decode cells run for all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "qwen2_moe_a2_7b",
+    "dbrx_132b",
+    "qwen3_0_6b",
+    "gemma3_1b",
+    "stablelm_12b",
+    "gemma2_27b",
+    "seamless_m4t_large_v2",
+    "zamba2_1_2b",
+    "mamba2_130m",
+    "qwen2_vl_72b",
+]
+
+# canonical ids (assignment spelling) → module names
+ALIASES = {
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "dbrx-132b": "dbrx_132b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "gemma3-1b": "gemma3_1b",
+    "stablelm-12b": "stablelm_12b",
+    "gemma2-27b": "gemma2_27b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "mamba2-130m": "mamba2_130m",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+    microbatches: int = 1    # grad-accumulation factor for train cells
+
+
+CELLS: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256, microbatches=8),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def _module(arch: str):
+    name = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _module(arch).reduced()
+
+
+def cells_for(cfg: ModelConfig) -> List[ShapeCell]:
+    cells = [CELLS["train_4k"], CELLS["prefill_32k"], CELLS["decode_32k"]]
+    if cfg.sub_quadratic:
+        cells.append(CELLS["long_500k"])
+    return cells
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)

@@ -1,0 +1,44 @@
+"""qwen2-moe-a2.7b [moe] — hf:Qwen/Qwen1.5-MoE-A2.7B.
+
+24L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=151936; 60 routed experts
+top-4 + 4 shared experts (shared intermediate = 4·1408 = 5632, matching the
+HF config's shared_expert_intermediate_size).
+
+Sharding note: 60 experts don't divide the 16-wide model axis →
+``moe_sharding="tp"`` (expert-internal tensor parallelism); dbrx covers
+the EP case.  Paper technique: ``sparse()`` applies N:M 2:4 to the expert
+FFNs (the dominant parameter mass) — intra-expert semi-structured sparsity
+composing with top-k routing (DESIGN.md §5).
+"""
+
+from repro.core.sparse_linear import SparsityConfig
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b",
+        n_layers=24, d_model=2048, vocab_size=151936,
+        n_heads=16, n_kv_heads=16, d_ff=1408,
+        n_experts=60, n_shared_experts=4, top_k=4, d_expert=1408,
+        moe_sharding="tp", moe_impl="sorted",
+        rope_theta=1_000_000.0,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b-smoke",
+        n_layers=2, d_model=64, vocab_size=1024,
+        n_heads=4, n_kv_heads=4, d_ff=96,
+        n_experts=8, n_shared_experts=2, top_k=2, d_expert=96,
+        moe_sharding="tp", moe_impl="sorted", remat=False,
+    )
+
+
+def sparse() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        config(),
+        expert_sparsity=SparsityConfig(format="nm", n=2, m=4, block_n=128),
+        mlp_sparsity=SparsityConfig(format="nm", n=2, m=4, block_n=128))

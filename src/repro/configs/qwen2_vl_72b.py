@@ -1,0 +1,42 @@
+"""qwen2-vl-72b [vlm] — arXiv:2409.12191.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064; M-RoPE with
+(temporal, height, width) sections (16, 24, 24) over head_dim=128.  The
+vision frontend (dynamic-resolution ViT) is a STUB per the assignment:
+``input_specs`` provides precomputed patch embeddings; text-only decode
+passes identical position triples (reduces exactly to standard RoPE).
+
+The largest dense cell (72B): exercises ZeRO-3 + TP at 80 layers.
+"""
+
+from repro.core.sparse_linear import SparsityConfig
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        n_layers=80, d_model=8192, vocab_size=152064,
+        n_heads=64, n_kv_heads=8, head_dim=128, d_ff=29568,
+        mrope_sections=(16, 24, 24),
+        input_mode="embeds",
+        rope_theta=1_000_000.0,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b-smoke",
+        n_layers=2, d_model=64, vocab_size=1024,
+        n_heads=4, n_kv_heads=2, head_dim=32, d_ff=128,
+        mrope_sections=(4, 6, 6),
+        input_mode="embeds", remat=False,
+    )
+
+
+def sparse() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        config(),
+        mlp_sparsity=SparsityConfig(format="nm", n=2, m=4, block_n=128),
+        attn_sparsity=SparsityConfig(format="nm", n=2, m=4, block_n=128))

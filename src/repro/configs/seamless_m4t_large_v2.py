@@ -1,0 +1,41 @@
+"""seamless-m4t-large-v2 [audio] — arXiv:2308.11596.
+
+Enc-dec backbone: 24 encoder + 24 decoder layers, d_model=1024 16H
+(kv=16) d_ff=8192 vocab=256206.  The speech frontend (conformer feature
+extractor) is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, L_src, d_model).
+
+Not sub-quadratic (full attention both sides) → long_500k skipped.
+Decode cells run: the decoder decodes with self-KV at seq_len plus
+decode-invariant cross-KV (precomputed at prefill).
+"""
+
+from repro.core.sparse_linear import SparsityConfig
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2",
+        n_layers=24, d_model=1024, vocab_size=256206,
+        n_heads=16, n_kv_heads=16, d_ff=8192,
+        is_encoder_decoder=True, n_encoder_layers=24,
+        input_mode="embeds", mlp_gated=False,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2-smoke",
+        n_layers=2, d_model=64, vocab_size=1024,
+        n_heads=4, n_kv_heads=4, d_ff=128,
+        is_encoder_decoder=True, n_encoder_layers=2,
+        input_mode="embeds", mlp_gated=False, remat=False,
+    )
+
+
+def sparse() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        config(),
+        mlp_sparsity=SparsityConfig(format="nm", n=2, m=4, block_n=128))

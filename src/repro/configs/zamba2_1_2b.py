@@ -1,0 +1,41 @@
+"""zamba2-1.2b [hybrid] — arXiv:2411.15242.
+
+38L d_model=2048 32H (kv=32) d_ff=8192 vocab=32000, ssm_state=64; Mamba-2
+trunk with the globally *shared* attention block applied every 6 layers
+(zamba signature; per-invocation LoRA deltas omitted — DESIGN.md
+§model-notes).
+
+Sub-quadratic (SSM trunk, KV only at the ~6 shared slots) → long_500k
+runs; the shared-slot KV shards its 32 heads over the model axis
+(``kv_mode="heads"``).
+"""
+
+from repro.core.sparse_linear import SparsityConfig
+from repro.models.config import ModelConfig, zamba_kinds
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b",
+        n_layers=38, d_model=2048, vocab_size=32000,
+        n_heads=32, n_kv_heads=32, d_ff=8192,
+        ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_chunk=256,
+        layer_kinds=zamba_kinds(38, 6),
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b-smoke",
+        n_layers=6, d_model=64, vocab_size=1024,
+        n_heads=4, n_kv_heads=4, d_ff=128,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+        layer_kinds=zamba_kinds(6, 3), remat=False,
+    )
+
+
+def sparse() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        config(),
+        mlp_sparsity=SparsityConfig(format="nm", n=2, m=4, block_n=128))

@@ -1,0 +1,278 @@
+"""Lookahead LSB encoding of sparse DNN weights (paper Algorithms 1 + 2).
+
+This module is the *faithful* reproduction of the paper's central software
+contribution: DNN weights are static at run time, so a pre-processing pass
+
+  1. clamps INT8 weights to the INT7 dynamic range [-64, 63] (Section III-B:
+     "The dynamic range of INT8 weights is limited to [-64, 63] so as to not
+     use the most significant bit after the signed bit"),
+  2. walks blocks of 4 weights along the reduction (input-channel) dimension,
+     counts how many *consecutive all-zero* blocks follow each block
+     (Algorithm 1, ``skip_blocks``, a 4-bit counter, 0..15), and
+  3. bit-packs one bit of that counter into the LSB of each of the block's 4
+     weights (Algorithm 2, ``encodeLastBits``): the sign bit is preserved, the
+     (redundant) bit-6 is dropped, magnitude bits shift left one position and
+     the skip bit lands in the LSB.
+
+The encoded byte layout is ``[sign, b5, b4, b3, b2, b1, b0, skip]`` where
+``sign b5..b0`` is the exact INT7 value (the clamp made bit 6 redundant, so
+the encoding is *lossless given the INT7 clamp*) and ``skip`` is one bit of
+the 4-bit lookahead counter.  At run time the paper's ``sssa_inc_indvar``
+instruction extracts the 4 skip bits of a block and bumps the inner-loop
+induction variable by ``4 * (skip + 1)``; our TPU adaptation instead consumes
+the same metadata via a scalar pass that builds non-zero block index lists
+(see ``core.sparsity.skip_lists_from_encoded``) feeding a Pallas
+scalar-prefetch grid.
+
+All functions are pure, jittable, and operate on the *last* axis as the
+reduction axis (the innermost-loop order of the paper's kernels).  Bit
+manipulation is done in int32 and cast back, since XLA's int8 shifts on
+negative values are implementation-defined on some backends.
+
+Paper deviations (recorded in DESIGN.md §2):
+  * Algorithm 1's pseudo-code caps the while loop at ``skip_blocks < 4``
+    while the text says the counter "can range from 0 to 15" (4 bits).  The
+    pseudo-code bound is an evident typo; we use ``cap=15`` by default but
+    expose it as a parameter (tests exercise both).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 4              # weights per block (four INT8 lanes of one 32-bit reg)
+SKIP_CAP = 15          # 4-bit lookahead counter
+INT7_MIN, INT7_MAX = -64, 63
+
+
+# ---------------------------------------------------------------------------
+# INT7 clamp (Section III-B)
+# ---------------------------------------------------------------------------
+
+def clamp_int7(w: jax.Array) -> jax.Array:
+    """Clamp int8 weights to [-64, 63] so bit 6 mirrors the sign bit."""
+    return jnp.clip(w.astype(jnp.int32), INT7_MIN, INT7_MAX).astype(jnp.int8)
+
+
+def quantize_int7(w: jax.Array, axis: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-output-channel quantization of float weights to INT7.
+
+    Returns ``(q, scale)`` with ``w ≈ q * scale`` and ``q`` int8 in
+    [-64, 63].  ``axis`` is the axis *reduced over* when computing the scale
+    (i.e. scales are per remaining channel).  Zero weights stay exactly zero,
+    which is what lets pruning masks survive quantization.
+    """
+    absmax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / INT7_MAX, 1.0)
+    q = jnp.clip(jnp.round(w / scale), INT7_MIN, INT7_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_int8(w: jax.Array, axis: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-channel INT8 quantization (the paper's baseline)."""
+    absmax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — lookahead skip counts
+# ---------------------------------------------------------------------------
+
+def block_is_zero(w: jax.Array) -> jax.Array:
+    """``w``: int8 ``[..., n]`` with ``n % 4 == 0`` → bool ``[..., n//4]``.
+
+    True where a block of 4 consecutive weights is entirely zero
+    (``checkBlkSkip`` in Algorithm 1).
+    """
+    n = w.shape[-1]
+    if n % BLOCK:
+        raise ValueError(f"last axis ({n}) must be a multiple of {BLOCK}")
+    blocks = w.reshape(*w.shape[:-1], n // BLOCK, BLOCK)
+    return jnp.all(blocks == 0, axis=-1)
+
+
+def skip_counts(zero_blocks: jax.Array, cap: int = SKIP_CAP) -> jax.Array:
+    """Number of consecutive all-zero blocks following each block (Alg. 1).
+
+    ``zero_blocks``: bool ``[..., nb]`` → uint8 ``[..., nb]`` in [0, cap].
+
+    Vectorized run-length-from-the-right: ``run[b] = 0`` if block ``b`` is
+    non-zero else ``run[b+1] + 1`` (``run[nb] = 0``); the lookahead count of
+    block ``b`` is ``min(run[b+1], cap)``.  Implemented with a reversed
+    ``lax.associative_scan`` so it stays O(log n) and jittable for the
+    offline encoding pass over large weight tensors.
+    """
+    z = zero_blocks.astype(jnp.int32)
+
+    # run-length of consecutive zeros ending at b obeys the affine
+    # recurrence r_b = z_b·r_{b-1} + z_b; affine maps (a, b): x ↦ a·x + b
+    # compose associatively as (a2,b2)∘(a1,b1) = (a1·a2, b1·a2 + b2).
+    # Scanning the reversed array gives run-lengths *starting* at b.
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    rev = jnp.flip(z, axis=-1)
+    _, counts = jax.lax.associative_scan(combine, (rev, rev), axis=-1)
+    run = jnp.flip(counts, axis=-1)          # run[b] = zeros starting at b
+    nxt = jnp.concatenate(
+        [run[..., 1:], jnp.zeros_like(run[..., :1])], axis=-1
+    )                                        # run starting at b+1
+    return jnp.minimum(nxt, cap).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — encodeLastBits (and its inverse)
+# ---------------------------------------------------------------------------
+
+def encode_block_bits(w: jax.Array, skip: jax.Array) -> jax.Array:
+    """Embed a 4-bit ``skip`` count into a block of 4 int7 weights (Alg. 2).
+
+    ``w``: int8 ``[..., nb, 4]`` already clamped to [-64, 63];
+    ``skip``: uint8 ``[..., nb]``.  Bit ``i`` of ``skip`` goes to the LSB of
+    weight ``i``.  Returns int8 with layout ``[sign, b5..b0, skip_bit]``.
+    """
+    wi = w.astype(jnp.int32) & 0xFF               # two's-complement byte
+    sign = (wi >> 7) & 0x1
+    skip_bits = (
+        (skip.astype(jnp.int32)[..., None] >> jnp.arange(BLOCK)) & 0x1
+    )
+    body = wi & 0b10111111                        # drop redundant bit 6
+    body = (body << 1) & 0b01111110               # shift magnitude up
+    enc = body | skip_bits | (sign << 7)
+    return _to_int8(enc)
+
+
+def decode_values(enc: jax.Array) -> jax.Array:
+    """Recover the exact INT7 weight values from encoded bytes.
+
+    ``enc``: int8 of any shape → int8 in [-64, 63].  This is the arithmetic
+    the paper's ``sssa_mac`` performs in hardware on its 7-bit weight lanes.
+    """
+    e = enc.astype(jnp.int32) & 0xFF
+    sign = (e >> 7) & 0x1
+    u = ((e >> 1) & 0x3F) | (sign << 6)           # 7-bit two's complement
+    v = jnp.where(u >= 64, u - 128, u)
+    return v.astype(jnp.int8)
+
+
+def decode_skip(enc: jax.Array) -> jax.Array:
+    """Extract the 4-bit lookahead counter from a block of encoded weights.
+
+    ``enc``: int8 ``[..., nb, 4]`` → uint8 ``[..., nb]``.  This is the
+    ``sssa_inc_indvar`` bit extraction (b24, b16, b8, b0 of the 32-bit reg).
+    """
+    bits = (enc.astype(jnp.int32) & 0x1)
+    weights = 1 << jnp.arange(BLOCK)
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Whole-tensor encode / decode
+# ---------------------------------------------------------------------------
+
+def encode_stream(w: jax.Array, cap: int = SKIP_CAP) -> jax.Array:
+    """Encode int8 weights along the last (reduction) axis.
+
+    Clamps to INT7, computes per-block lookahead counts, and embeds them.
+    Every block is encoded — including all-zero blocks: runs longer than
+    ``cap`` make the walker land on a zero block, whose own counter then
+    continues the skip chain (see ``simulate_walk``).
+    """
+    w7 = clamp_int7(w)
+    n = w7.shape[-1]
+    blocks = w7.reshape(*w7.shape[:-1], n // BLOCK, BLOCK)
+    skips = skip_counts(block_is_zero(w7), cap=cap)
+    enc = encode_block_bits(blocks, skips)
+    return enc.reshape(w7.shape)
+
+
+def decode_stream(enc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`encode_stream` → ``(values int8, skips uint8)``."""
+    vals = decode_values(enc)
+    n = enc.shape[-1]
+    skips = decode_skip(enc.reshape(*enc.shape[:-1], n // BLOCK, BLOCK))
+    return vals, skips
+
+
+def encode_weight_matrix(w: jax.Array, cap: int = SKIP_CAP) -> jax.Array:
+    """Encode a 2D weight ``(K, N)`` along K (each output column's stream).
+
+    The paper encodes the innermost-loop order — input channels — which for
+    a ``y = x @ w`` matmul is the K axis of ``w``; transpose, encode rows,
+    transpose back.
+    """
+    if w.ndim != 2:
+        raise ValueError("encode_weight_matrix expects (K, N)")
+    return encode_stream(w.T, cap=cap).T
+
+
+def decode_weight_matrix(enc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`encode_weight_matrix` → ``(values (K,N), skips (N, K/4))``."""
+    vals, skips = decode_stream(enc.T)
+    return vals.T, skips
+
+
+# ---------------------------------------------------------------------------
+# Reference walker (Listing 2 semantics) — used by tests & the cycle model
+# ---------------------------------------------------------------------------
+
+def simulate_walk(enc_stream: np.ndarray, cap: int = SKIP_CAP) -> list[int]:
+    """Simulate the SSSA inner loop over one encoded stream (numpy, offline).
+
+    Returns the list of *visited* block indices, exactly as Listing 2's
+    ``while (i < in_channel) { sssa_mac(...); i = sssa_inc_indvar(...); }``
+    would visit them.  Invariants (tested):
+      * every non-zero block is visited;
+      * visited zero blocks contribute 0 to the MAC (correctness);
+      * with ``cap >= longest zero run`` no zero block after block 0 is
+        visited.
+    """
+    enc = np.asarray(enc_stream).reshape(-1, BLOCK)
+    nb = enc.shape[0]
+    visited = []
+    b = 0
+    while b < nb:
+        visited.append(b)
+        bits = (enc[b].astype(np.int32) & 0x1)
+        skip = int((bits * (1 << np.arange(BLOCK))).sum())
+        b += skip + 1
+    return visited
+
+
+def _to_int8(x: jax.Array) -> jax.Array:
+    """Reinterpret the low byte of an int32 as a signed int8."""
+    return jnp.where(x >= 128, x - 256, x).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Tile-level lookahead (TPU adaptation — DESIGN.md §2 table, row 2b)
+# ---------------------------------------------------------------------------
+
+def tile_zero_map(w: jax.Array, bk: int, bn: int) -> jax.Array:
+    """Bool map ``(K//bk, N//bn)`` of all-zero (bk, bn) tiles of ``w (K, N)``.
+
+    The TPU analogue of Algorithm 1's block scan: the skippable unit grows
+    from 4 weights to one MXU-aligned VMEM tile.
+    """
+    K, N = w.shape
+    if K % bk or N % bn:
+        raise ValueError(f"weight {w.shape} not divisible by tile ({bk},{bn})")
+    t = w.reshape(K // bk, bk, N // bn, bn)
+    return jnp.all(t == 0, axis=(1, 3))
+
+
+def tile_skip_counts(w: jax.Array, bk: int, bn: int,
+                     cap: int = SKIP_CAP) -> jax.Array:
+    """Lookahead counts over K-tiles, per N-strip — Algorithm 1 at tile
+    granularity.  Returns uint8 ``(N//bn, K//bk)``."""
+    zmap = tile_zero_map(w, bk, bn).T          # (Nb, Kb) — scan along K
+    return skip_counts(zmap, cap=cap)

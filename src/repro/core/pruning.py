@@ -1,0 +1,202 @@
+"""Magnitude pruning producing the sparsity structures of paper Fig. 1.
+
+The paper assumes pruned models as *input* ("any pruning method that
+generates a model with unstructured or semi-structured sparsity conforming
+to our sparsity pattern can be utilized", Section IV-C) and cites iterative
+explainable-AI-ranked pruning.  We implement the standard magnitude family —
+the ranking criterion is pluggable — because what the accelerators consume
+is the *mask structure*, not the ranking method:
+
+  * unstructured      — arbitrary zeros (paper Fig. 1b, USSA's target)
+  * block / "4:4"     — whole blocks of 4 along the reduction axis zeroed
+                        (paper Fig. 1c generalized; SSSA's target)
+  * n:m               — keep n of every m along the reduction axis (the
+                        NVIDIA-style pattern the paper compares against via
+                        IndexMAC; our USSA TPU adaptation's native pattern)
+  * combined          — block-prune to x_ss, then unstructured/n:m inside
+                        surviving blocks (CSA's target)
+
+All functions return ``(pruned_weights, mask)`` with ``mask`` float 0/1 of
+the weight's shape; masks compose with the optimizer (``optim.masked``) so
+pruned weights stay zero during fine-tuning, and with ``core.sparsity``
+packers which consume the *structure* of the zeros.
+
+Conventions: weights are ``(K, N)`` = (reduction/in-features, out-features);
+the reduction axis (axis 0) is the paper's input-channel innermost loop.
+Block and n:m patterns are imposed along K.  Convolution kernels
+``(H, W, Cin, Cout)`` are pruned by reshaping to ``(H*W*Cin, Cout)`` —
+matching the paper's Algorithm 1 walk over ``kernel[h][w][c]``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import BLOCK
+
+Array = jax.Array
+Score = Callable[[Array], Array]   # |w| by default; pluggable (XAI ranks etc.)
+
+
+def _magnitude(w: Array) -> Array:
+    return jnp.abs(w)
+
+
+def _threshold_topk(scores: Array, keep: int) -> Array:
+    """Mask keeping the globally top-``keep`` entries of ``scores``."""
+    flat = scores.reshape(-1)
+    keep = max(int(keep), 1)
+    kth = jax.lax.top_k(flat, keep)[0][-1]
+    # ">= kth" can keep ties beyond `keep`; deterministic and side-effect free,
+    # which matters more here than exact cardinality.
+    return (scores >= kth).astype(scores.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Unstructured (Fig. 1b)
+# ---------------------------------------------------------------------------
+
+def unstructured(w: Array, sparsity: float,
+                 score: Score = _magnitude) -> Tuple[Array, Array]:
+    """Zero the ``sparsity`` fraction of smallest-|w| entries, anywhere."""
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(f"sparsity {sparsity} must be in [0, 1)")
+    keep = round(w.size * (1.0 - sparsity))
+    mask = _threshold_topk(score(w), keep).astype(w.dtype)
+    return w * mask, mask
+
+
+# ---------------------------------------------------------------------------
+# Semi-structured "4:4" blocks along the reduction axis (Fig. 1c / SSSA)
+# ---------------------------------------------------------------------------
+
+def block_semi_structured(w: Array, sparsity: float, block: int = BLOCK,
+                          score: Score = _magnitude) -> Tuple[Array, Array]:
+    """Zero whole length-``block`` groups along axis 0 (the paper's 4:4).
+
+    Blocks are ranked by their L1 score mass; the lowest ``sparsity``
+    fraction of blocks is removed entirely.  This produces exactly the
+    structure SSSA skips: runs of all-zero blocks in each output column's
+    K-stream.
+    """
+    K, N = w.shape
+    if K % block:
+        raise ValueError(f"K={K} not divisible by block={block}")
+    s = score(w).reshape(K // block, block, N).sum(axis=1)      # (Kb, N)
+    keep = round(s.size * (1.0 - sparsity))
+    bmask = _threshold_topk(s, keep)                             # (Kb, N)
+    mask = jnp.repeat(bmask, block, axis=0).astype(w.dtype)      # (K, N)
+    return w * mask, mask
+
+
+# ---------------------------------------------------------------------------
+# N:M along the reduction axis (USSA TPU adaptation; IndexMAC's pattern)
+# ---------------------------------------------------------------------------
+
+def n_m(w: Array, n: int, m: int, group: int = 1,
+        score: Score = _magnitude) -> Tuple[Array, Array]:
+    """Keep the top-``n`` of every ``m`` consecutive K-entries per column.
+
+    ``group`` > 1 shares the kept positions across groups of ``group``
+    output columns (tile-shared N:M — the MXU-friendly variant our
+    ``nm_spmm`` kernel consumes; ``group=1`` is the classic per-column
+    pattern).  Sparsity is exactly ``1 - n/m``.
+    """
+    K, N = w.shape
+    if K % m:
+        raise ValueError(f"K={K} not divisible by m={m}")
+    if N % group:
+        raise ValueError(f"N={N} not divisible by group={group}")
+    if not 0 < n <= m:
+        raise ValueError(f"need 0 < n <= m, got {n}:{m}")
+    s = score(w).reshape(K // m, m, N // group, group).sum(axis=3)
+    # rank within each m-group: keep positions of the top-n scores
+    order = jnp.argsort(-s, axis=1)                 # (Kg, m, Ng) descending
+    ranks = jnp.argsort(order, axis=1)              # rank of each position
+    gmask = (ranks < n).astype(w.dtype)             # (Kg, m, Ng)
+    mask = jnp.repeat(gmask[..., None], group, axis=3)
+    mask = mask.reshape(K, N)
+    return w * mask, mask
+
+
+# ---------------------------------------------------------------------------
+# Combined (CSA): block sparsity × inner unstructured / n:m
+# ---------------------------------------------------------------------------
+
+def combined(w: Array, x_ss: float, x_us: float, block: int = BLOCK,
+             score: Score = _magnitude) -> Tuple[Array, Array]:
+    """Paper Section III-D / Fig. 10: both sparsity types at once.
+
+    First remove ``x_ss`` of blocks (semi-structured), then remove ``x_us``
+    of the *surviving* weights unstructured.  Total sparsity is
+    ``x_ss + (1 - x_ss) * x_us``.
+    """
+    wb, bmask = block_semi_structured(w, x_ss, block=block, score=score)
+    surviving = bmask.sum()
+    keep = jnp.round(surviving * (1.0 - x_us)).astype(jnp.int32)
+    s = jnp.where(bmask > 0, score(wb), -jnp.inf)
+    kth = jax.lax.top_k(s.reshape(-1), 1 + int(w.size) - 1)[0]  # full sort
+    # top-`keep` among surviving entries:
+    kth_val = kth[jnp.maximum(keep - 1, 0)]
+    umask = ((s >= kth_val) & (bmask > 0)).astype(w.dtype)
+    return w * umask, umask
+
+
+def combined_nm(w: Array, x_ss: float, n: int, m: int, group: int = 1,
+                block: Optional[int] = None,
+                score: Score = _magnitude) -> Tuple[Array, Array]:
+    """CSA variant used by the TPU kernels: block sparsity outside, exact
+    n:m inside surviving blocks.  ``block`` defaults to a multiple of ``m``
+    (the kernel tile contract)."""
+    block = block or max(BLOCK, m)
+    if block % m:
+        raise ValueError(f"block={block} must be a multiple of m={m}")
+    _, bmask = block_semi_structured(w, x_ss, block=block, score=score)
+    _, nmask = n_m(w, n, m, group=group, score=score)
+    mask = bmask * nmask
+    return w * mask, mask
+
+
+# ---------------------------------------------------------------------------
+# Iterative schedule (Section IV-C "iterative pruning approach")
+# ---------------------------------------------------------------------------
+
+def iterative_schedule(target: float, steps: int, power: float = 3.0):
+    """Zhu-Gupta cubic sparsity schedule: s_t = target·(1-(1-t/T)^power).
+
+    The paper prunes iteratively with fine-tuning between steps; the
+    trainer calls this to ramp sparsity.  Returns a list of per-step
+    sparsities ending exactly at ``target``.
+    """
+    if steps < 1:
+        raise ValueError("steps >= 1")
+    return [target * (1.0 - (1.0 - (t + 1) / steps) ** power)
+            for t in range(steps)]
+
+
+def sparsity_of(mask_or_w: Array) -> float:
+    """Fraction of zeros (the paper's sparsity ratio x)."""
+    return float(jnp.mean(mask_or_w == 0))
+
+
+def prune(w: Array, method: str, **kw) -> Tuple[Array, Array]:
+    """String-dispatched entry point used by configs.
+
+    methods: ``unstructured(sparsity=)``, ``block(sparsity=, block=)``,
+    ``nm(n=, m=, group=)``, ``combined(x_ss=, x_us=)``,
+    ``combined_nm(x_ss=, n=, m=, group=)``.
+    """
+    fns = {
+        "unstructured": unstructured,
+        "block": block_semi_structured,
+        "nm": n_m,
+        "combined": combined,
+        "combined_nm": combined_nm,
+    }
+    if method not in fns:
+        raise ValueError(f"unknown pruning method {method!r}; one of {list(fns)}")
+    return fns[method](w, **kw)

@@ -1,0 +1,259 @@
+"""SparseLinear — the paper's technique as a first-class framework feature.
+
+A linear layer whose weight can live in any of the sparsity formats
+(DESIGN.md §4).  Configs declare a :class:`SparsityConfig` per layer family;
+models build projections through :func:`init_linear` / :func:`apply_linear`
+and never branch on format themselves.  The lifecycle mirrors the paper's
+co-design flow (Fig. 2):
+
+  1. train / load dense weights;
+  2. ``prune_params`` — offline pruning pass (Section IV-C);
+  3. ``pack_params`` — offline packing into the configured format
+     (Algorithm 1+2 for ``lookahead``; tile/N:M packing for the TPU forms);
+  4. forward dispatches through ``kernels.ops.sparse_matmul``.
+
+For the multi-pod dry-run (no real weights), :func:`abstract_params`
+produces the same pytree out of ``ShapeDtypeStruct`` leaves with a nominal
+density, so `jit(...).lower()` sees exactly the structures the packed model
+would run with.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pruning, sparsity
+from repro.core.sparsity import (BlockSparsePack, CombinedPack, LookaheadPack,
+                                 NMPack)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Per-layer-family sparsity declaration (config-file level).
+
+    ``format``: ``dense | lookahead | block | nm | combined``
+    ``sparsity``: target block sparsity for block/combined (paper's x_ss)
+    ``n, m``: N:M pattern for nm/combined (paper's unstructured x_us ≈ 1-n/m)
+    ``block_k, block_n``: skip-tile geometry (TPU analogue of the paper's 4)
+    ``impl``: ``auto | kernel | ref`` kernel dispatch (ops.py)
+    """
+    format: str = "dense"
+    sparsity: float = 0.5
+    n: int = 2
+    m: int = 4
+    block_k: int = 128
+    block_n: int = 128
+    impl: str = "auto"
+
+    def __post_init__(self):
+        if self.format not in ("dense", "lookahead", "block", "nm", "combined"):
+            raise ValueError(f"unknown sparsity format {self.format!r}")
+
+
+DENSE = SparsityConfig(format="dense")
+
+
+# ---------------------------------------------------------------------------
+# Dense init + offline prune/pack passes
+# ---------------------------------------------------------------------------
+
+def init_linear(rng: jax.Array, K: int, N: int,
+                dtype=jnp.bfloat16) -> Array:
+    """Dense init (fan-in scaled); packing is a separate offline pass."""
+    w = jax.random.normal(rng, (K, N), jnp.float32) / math.sqrt(K)
+    return w.astype(dtype)
+
+
+def prune_weight(w: Array, cfg: SparsityConfig) -> Tuple[Array, Array]:
+    """Offline pruning matching the configured format's structure."""
+    if cfg.format == "dense":
+        return w, jnp.ones_like(w)
+    if cfg.format == "lookahead":
+        # the faithful path prunes at the paper's block-4 granularity
+        return pruning.block_semi_structured(w, cfg.sparsity, block=4)
+    if cfg.format == "block":
+        return pruning.block_semi_structured(w, cfg.sparsity,
+                                             block=cfg.block_k)
+    if cfg.format == "nm":
+        return pruning.n_m(w, cfg.n, cfg.m, group=cfg.block_n)
+    if cfg.format == "combined":
+        return pruning.combined_nm(w, cfg.sparsity, cfg.n, cfg.m,
+                                   group=cfg.block_n, block=cfg.block_k)
+    raise ValueError(cfg.format)
+
+
+def pack_weight(w: Array, cfg: SparsityConfig, pad_to: Optional[int] = None):
+    """Offline packing of a (pruned) dense weight into the configured
+    format.  Returns the dense array unchanged for ``format='dense'``."""
+    if cfg.format == "dense":
+        return w
+    if cfg.format == "lookahead":
+        return LookaheadPack.from_float(w)
+    if cfg.format == "block":
+        return sparsity.pack_block_sparse(w, cfg.block_k, cfg.block_n,
+                                          pad_to=pad_to)
+    if cfg.format == "nm":
+        return sparsity.pack_nm(w, cfg.n, cfg.m, g=cfg.block_n)
+    if cfg.format == "combined":
+        return sparsity.pack_combined(w, cfg.n, cfg.m, cfg.block_k,
+                                      cfg.block_n, pad_to=pad_to)
+    raise ValueError(cfg.format)
+
+
+def sparsify_weight(w: Array, cfg: SparsityConfig):
+    """prune + pack in one offline call."""
+    pruned, _ = prune_weight(w, cfg)
+    return pack_weight(pruned, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Abstract (ShapeDtypeStruct) packs for the dry-run
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_pack(K: int, N: int, cfg: SparsityConfig, dtype=jnp.bfloat16,
+                  density: Optional[float] = None):
+    """The pack pytree with ShapeDtypeStruct leaves — same structure the
+    packed model would carry, sized at the configured nominal density."""
+    if cfg.format == "dense":
+        return _sds((K, N), dtype)
+    if cfg.format == "lookahead":
+        return LookaheadPack(enc=_sds((K, N), jnp.int8),
+                             scale=_sds((1, N), jnp.float32), K=K, N=N)
+    d = density if density is not None else (1.0 - cfg.sparsity)
+    if cfg.format == "block":
+        Kb, Nb = K // cfg.block_k, N // cfg.block_n
+        max_nnz = max(1, math.ceil(Kb * d))
+        return BlockSparsePack(
+            values=_sds((Nb, max_nnz, cfg.block_k, cfg.block_n), dtype),
+            indices=_sds((Nb, max_nnz), jnp.int32),
+            counts=_sds((Nb,), jnp.int32),
+            K=K, N=N, bk=cfg.block_k, bn=cfg.block_n, max_nnz=max_nnz)
+    if cfg.format == "nm":
+        Kc = K * cfg.n // cfg.m
+        return NMPack(values=_sds((Kc, N), dtype),
+                      idx=_sds((Kc, N // cfg.block_n), jnp.int32),
+                      K=K, N=N, n=cfg.n, m=cfg.m, g=cfg.block_n)
+    if cfg.format == "combined":
+        Kb, Nb = K // cfg.block_k, N // cfg.block_n
+        bkc = cfg.block_k * cfg.n // cfg.m
+        max_nnz = max(1, math.ceil(Kb * d))
+        return CombinedPack(
+            values=_sds((Nb, max_nnz, bkc, cfg.block_n), dtype),
+            gidx=_sds((Nb, max_nnz, bkc), jnp.int32),
+            indices=_sds((Nb, max_nnz), jnp.int32),
+            counts=_sds((Nb,), jnp.int32),
+            K=K, N=N, n=cfg.n, m=cfg.m, bk=cfg.block_k, bn=cfg.block_n,
+            max_nnz=max_nnz)
+    raise ValueError(cfg.format)
+
+
+def sparsify_abstract(abstract_params, cfg) -> Any:
+    """Replace weight ShapeDtypeStruct leaves with abstract *packs* per the
+    model config's per-family sparsity — what the dry-run lowers for the
+    paper-faithful sparse cells (inference: packed weights, no grads).
+
+    Stacked leading axes (layer scan, expert stacks) are preserved on the
+    pack's array leaves; the pack's static geometry describes the 2D
+    per-slice weight, matching how ``lax.scan`` slices it in-model.
+    Leaves whose K/N don't divide the pack geometry stay dense (recorded
+    by the caller via tree inspection).
+    """
+    import jax
+
+    def names_of(path):
+        out = []
+        for p in path:
+            if hasattr(p, "key"):
+                out.append(str(p.key))
+        return out
+
+    def rule(path, leaf):
+        names = names_of(path)
+        scfg = None
+        if any(n in ("w_in", "w_gate", "w_out") for n in names):
+            moe = "moe" in names and "shared" not in names
+            scfg = cfg.expert_sparsity if moe else cfg.mlp_sparsity
+        elif any(n in ("in_proj", "out_proj") for n in names):
+            scfg = cfg.mlp_sparsity
+        elif any(n in ("wq", "wk", "wv", "wo") for n in names):
+            scfg = cfg.attn_sparsity
+        if scfg is None or scfg.format == "dense" or leaf.ndim < 2:
+            return leaf
+        lead = leaf.shape[:-2]
+        K, N = leaf.shape[-2:]
+        # geometry guards: every dim the pack assumes must divide
+        if scfg.format in ("nm", "combined") and (K % scfg.m or
+                                                  N % scfg.block_n):
+            return leaf
+        if scfg.format in ("block", "combined") and K % scfg.block_k:
+            return leaf
+        try:
+            pack = abstract_pack(K, N, scfg, dtype=leaf.dtype)
+        except Exception:
+            return leaf
+        if lead:
+            pack = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(lead + s.shape, s.dtype),
+                pack)
+        return pack
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def apply_linear(x: Array, weight: Any, cfg: SparsityConfig = DENSE) -> Array:
+    """``x (..., K) @ weight (K, N) -> (..., N)`` for any format.
+
+    Leading dims are flattened to the kernel's M dimension and restored.
+    """
+    from repro.kernels import ops  # local import: kernels pull in pallas
+
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    if isinstance(weight, (BlockSparsePack, NMPack, CombinedPack,
+                           LookaheadPack)):
+        out = ops.sparse_matmul(x2, weight, impl=cfg.impl)
+        N = weight.N
+    else:
+        out = jnp.dot(x2, weight)
+        N = weight.shape[-1]
+    return out.reshape(*lead, N)
+
+
+def weight_out_features(weight: Any) -> int:
+    if isinstance(weight, (BlockSparsePack, NMPack, CombinedPack,
+                           LookaheadPack)):
+        return weight.N
+    return weight.shape[-1]
+
+
+def format_stats(weight: Any) -> dict:
+    """values/metadata bytes + density — feeds bench_resources (Table III
+    analogue)."""
+    if isinstance(weight, (BlockSparsePack, NMPack, CombinedPack,
+                           LookaheadPack)):
+        stats = {
+            "values_bytes": sparsity.values_bytes(weight),
+            "metadata_bytes": sparsity.metadata_bytes(weight),
+        }
+        if isinstance(weight, BlockSparsePack):
+            stats["density"] = weight.density
+        return stats
+    return {"values_bytes": weight.size * weight.dtype.itemsize,
+            "metadata_bytes": 0, "density": 1.0}

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, batch_for, class_data, input_specs_for_batch, make_batch)

@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (  # noqa: F401
+    batch_specs, cache_specs, best_effort, mesh_axes, param_specs,
+    shard_batch, validate_specs)

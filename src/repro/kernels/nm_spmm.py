@@ -1,0 +1,101 @@
+"""USSA analogue: N:M compressed-K matmul as a Pallas TPU kernel.
+
+Paper mapping (DESIGN.md §2): the FPGA's variable-cycle MAC makes compute
+proportional to non-zero weights by skipping zero multiplies *in time*.  A
+systolic array has no per-element early-out, so the TPU-idiomatic way to
+make compute ∝ nnz is to *shrink the contraction dimension*: keep ``n`` of
+every ``m`` weights along K (positions shared across a ``g = bn``-wide
+column group so they are uniform inside a tile), store the kept values
+densely ``(Kc = K·n/m, N)`` plus 4-bit-sized position metadata, and have
+the kernel gather the matching activation rows before a dense
+``(bm, bkc) @ (bkc, bn)`` MXU matmul.  FLOPs and weight bytes both drop to
+``n/m`` of dense — the same "only as many multiplications as non-zero
+weights" property, expressed spatially instead of temporally.
+
+Grid: ``(M/bm, N/bn, Kc/bkc)``, reduction innermost.
+
+  * ``x``    (M, K)  block (bm, bk_src) with ``bk_src = bkc·m/n`` — the
+             source K-span covering compressed tile ``t``; index (i, t).
+  * ``vals`` (Kc, N) block (bkc, bn), index (t, j).
+  * ``idx``  (Kc, N/g) int32 block (bkc, 1), index (t, j) — position of
+             each kept weight within its m-group (the USSA "case signal",
+             precomputed offline instead of by comparators).
+
+In-kernel the local source row of compressed row ``r`` is
+``(r // n) * m + idx[r]`` — a VPU gather (``jnp.take``) over the VMEM tile,
+the alignment-multiplexer stage of the paper's Fig. 7 datapath.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sparsity import NMPack
+
+
+def _make_kernel(n: int, m: int, bkc: int):
+    def kernel(x_ref, v_ref, i_ref, o_ref, acc_ref):
+        t = pl.program_id(2)
+
+        @pl.when(t == 0)
+        def _zero():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # local source row of compressed row r: (r // n) * m + idx[r]
+        # (iota generated in-kernel: Pallas forbids captured constants)
+        r = jax.lax.iota(jnp.int32, bkc)
+        src = (r // n) * m + i_ref[:, 0]               # (bkc,) in [0, bk_src)
+        xg = jnp.take(x_ref[...], src, axis=1)         # (bm, bkc) VPU gather
+        acc_ref[...] += jax.lax.dot(xg.astype(jnp.float32),
+                                    v_ref[...].astype(jnp.float32),
+                                    preferred_element_type=jnp.float32)
+
+        @pl.when(t == pl.num_programs(2) - 1)
+        def _write():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bkc", "interpret"))
+def nm_spmm(x: jax.Array, pack: NMPack, *, bm: int = 128, bkc: int = 128,
+            interpret: bool = False) -> jax.Array:
+    """``x (M, K) @ pack (K, N) -> (M, N)`` with K compressed by n/m."""
+    M, K = x.shape
+    if K != pack.K:
+        raise ValueError(f"x K={K} != pack K={pack.K}")
+    n, m = pack.n, pack.m
+    Kc = pack.Kc
+    bn = pack.g                       # tile width == column-group width
+    if M % bm or Kc % bkc or pack.N % bn:
+        raise ValueError(f"shapes (M={M}, Kc={Kc}, N={pack.N}) not divisible "
+                         f"by tiles (bm={bm}, bkc={bkc}, bn={bn})")
+    if bkc % n:
+        raise ValueError(f"bkc={bkc} must be a multiple of n={n}")
+    bk_src = bkc * m // n
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(M // bm, pack.N // bn, Kc // bkc),
+        in_specs=[
+            pl.BlockSpec((bm, bk_src), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bkc, bn), lambda i, j, t: (t, j)),
+            pl.BlockSpec((bkc, 1), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _make_kernel(n, m, bkc),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, pack.N), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
+                                 pltpu.ARBITRARY)),
+        interpret=interpret,
+    )(x, pack.values, pack.idx)

@@ -1,0 +1,121 @@
+"""Public jit'd entry points for the sparse kernels.
+
+Dispatch policy (``impl``):
+  * ``"auto"``    — Pallas on TPU, Pallas-interpret on CPU when shapes are
+                    tile-aligned and small enough to be worth it in tests,
+                    else the jnp reference.  The dry-run always lowers the
+                    reference path (same FLOP/byte structure, compiles on
+                    the CPU SPMD backend).
+  * ``"kernel"``  — force Pallas (interpret=True off-TPU).
+  * ``"ref"``     — force the pure-jnp oracle.
+
+Every wrapper validates shapes eagerly so misuse fails at trace time with a
+message naming the pack geometry, and handles M-padding (the token dim is
+rarely tile-aligned at small batch).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import (BlockSparsePack, CombinedPack, LookaheadPack,
+                                 NMPack)
+from repro.kernels import ref as _ref
+from repro.kernels.bsr_matmul import bsr_matmul as _bsr_kernel
+from repro.kernels.csa_matmul import csa_matmul as _csa_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.lookahead_decode import lookahead_matmul as _la_kernel
+from repro.kernels.nm_spmm import nm_spmm as _nm_kernel
+
+Impl = Literal["auto", "kernel", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_m(x: jax.Array, bm: int):
+    M = x.shape[0]
+    pad = (-M) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, M
+
+
+def _resolve(impl: Impl) -> str:
+    if impl == "auto":
+        return "kernel" if _on_tpu() else "ref"
+    return impl
+
+
+def block_sparse_matmul(x: jax.Array, pack: BlockSparsePack,
+                        impl: Impl = "auto", bm: int = 128) -> jax.Array:
+    """SSSA analogue — see kernels/bsr_matmul.py."""
+    if _resolve(impl) == "ref":
+        return _ref.bsr_matmul_ref(x, pack)
+    xp, M = _pad_m(x, bm)
+    out = _bsr_kernel(xp, pack, bm=bm, interpret=not _on_tpu())
+    return out[:M]
+
+
+def nm_matmul(x: jax.Array, pack: NMPack, impl: Impl = "auto",
+              bm: int = 128, bkc: int = 128) -> jax.Array:
+    """USSA analogue — see kernels/nm_spmm.py."""
+    if _resolve(impl) == "ref":
+        return _ref.nm_spmm_ref(x, pack)
+    bkc = min(bkc, pack.Kc)
+    xp, M = _pad_m(x, bm)
+    out = _nm_kernel(xp, pack, bm=bm, bkc=bkc, interpret=not _on_tpu())
+    return out[:M]
+
+
+def combined_matmul(x: jax.Array, pack: CombinedPack, impl: Impl = "auto",
+                    bm: int = 128) -> jax.Array:
+    """CSA analogue — see kernels/csa_matmul.py."""
+    if _resolve(impl) == "ref":
+        return _ref.csa_matmul_ref(x, pack)
+    xp, M = _pad_m(x, bm)
+    out = _csa_kernel(xp, pack, bm=bm, interpret=not _on_tpu())
+    return out[:M]
+
+
+def lookahead_matmul(x: jax.Array, pack: LookaheadPack, impl: Impl = "auto",
+                     bm: int = 128, bk: int = 128, bn: int = 128) -> jax.Array:
+    """Faithful LSB-encoded matmul — see kernels/lookahead_decode.py."""
+    if _resolve(impl) == "ref":
+        return _ref.lookahead_matmul_ref(x, pack)
+    xp, M = _pad_m(x, bm)
+    out = _la_kernel(xp, pack, bm=bm, bk=min(bk, pack.K),
+                     bn=min(bn, pack.N), interpret=not _on_tpu())
+    return out[:M]
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              scale=None, impl: Impl = "auto", bq=128, bk=128) -> jax.Array:
+    """Fused attention — see kernels/flash_attention.py."""
+    if _resolve(impl) == "ref":
+        return _ref.mha_ref(q, k, v, causal=causal, window=window,
+                            softcap=softcap, scale=scale)
+    Lq, Lk = q.shape[-2], k.shape[-2]
+    return _flash_kernel(q, k, v, causal=causal, window=window,
+                         softcap=softcap, scale=scale,
+                         bq=min(bq, Lq), bk=min(bk, Lk),
+                         interpret=not _on_tpu())
+
+
+def sparse_matmul(x: jax.Array, weight, impl: Impl = "auto") -> jax.Array:
+    """Format-dispatched matmul: the single entry point ``SparseLinear``
+    calls.  ``weight`` may be a dense array or any pack."""
+    if isinstance(weight, BlockSparsePack):
+        return block_sparse_matmul(x, weight, impl)
+    if isinstance(weight, NMPack):
+        return nm_matmul(x, weight, impl)
+    if isinstance(weight, CombinedPack):
+        return combined_matmul(x, weight, impl)
+    if isinstance(weight, LookaheadPack):
+        return lookahead_matmul(x, weight, impl)
+    return jnp.dot(x, weight)

@@ -1,0 +1,347 @@
+"""Roofline numerators: exact jaxpr FLOP counting + trip-count-aware HLO
+collective parsing.
+
+Why not ``compiled.cost_analysis()`` alone?  XLA's HloCostAnalysis counts
+each ``while`` body ONCE — a scanned 80-layer model with 8 microbatches is
+undercounted ~640×.  The numbers here close that gap:
+
+  * :func:`jaxpr_flops` walks the closed jaxpr: ``dot_general`` and
+    ``conv`` FLOPs computed from static shapes, ``scan`` bodies multiplied
+    by their static ``length``, remat/pjit/custom-vjp bodies recursed.
+    Scan trip counts are static in jaxprs (unlike compiled HLO), so the
+    count is exact for everything that matters (matmuls); elementwise ops
+    are counted at 1 FLOP/element.  Counted on the *global* program —
+    divide by chips for per-chip work (our specs shard every large matmul
+    over data×model, so the division is tight; replicated small ops are
+    noise).
+
+  * :func:`hlo_collective_bytes` parses the compiled (per-device SPMD)
+    HLO: builds the computation table, extracts each ``while`` loop's trip
+    count from its condition's ROOT compare against a constant, and sums
+    collective operand bytes × the product of enclosing trip counts.
+
+  * :func:`memory_traffic` models per-step HBM traffic: parameters are
+    streamed once per microbatch (the weight-stationary ideal reads them
+    once per grid pass), gradients/optimizer state read+written once per
+    step, KV caches read once per decode step, plus 2× the compiled temp
+    buffer size (each temp byte written + read).  This is a *lower bound*
+    with the fusion behaviour of a TPU backend, which the CPU test
+    backend's 'bytes accessed' (Σ per-op operand bytes, pre-fusion) wildly
+    overestimates.
+
+EXPERIMENTS.md §Roofline reports these terms; the raw cost_analysis()/
+memory_analysis() numbers are kept alongside in the dry-run JSONs.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# jaxpr FLOP counter
+# ---------------------------------------------------------------------------
+
+
+def _dot_flops(eqn) -> float:
+    ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = math.prod(a.shape[i] for i in lb)
+    k = math.prod(a.shape[i] for i in lc)
+    m = math.prod(a.shape[i] for i in range(len(a.shape))
+                  if i not in lb and i not in lc)
+    n = math.prod(b.shape[i] for i in range(len(b.shape))
+                  if i not in rb and i not in rc)
+    return 2.0 * batch * m * n * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    dn = eqn.params["dimension_numbers"]
+    groups = eqn.params.get("feature_group_count", 1)
+    # rhs layout per dn.rhs_spec: (out_ch, in_ch/groups, *spatial)
+    rs = dn.rhs_spec
+    kernel_elems = math.prod(rhs.shape[i] for i in rs[2:])
+    cin_per_group = rhs.shape[rs[1]]
+    return 2.0 * math.prod(out.shape) * kernel_elems * cin_per_group
+
+
+def _is_float(aval) -> bool:
+    return np.issubdtype(aval.dtype, np.floating) or \
+        np.issubdtype(aval.dtype, np.complexfloating)
+
+
+def jaxpr_flops(jaxpr) -> float:
+    """Exact-for-matmuls FLOP count of a (Closed)Jaxpr."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    total = 0.0
+    for eqn in inner.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total += _dot_flops(eqn)
+        elif prim == "conv_general_dilated":
+            total += _conv_flops(eqn)
+        elif prim == "scan":
+            total += eqn.params["length"] * jaxpr_flops(eqn.params["jaxpr"])
+        elif prim == "while":
+            # only lax.map/fori with traced bounds reach here; use the
+            # carry-independent body once (we avoid raw while in models)
+            total += jaxpr_flops(eqn.params["body_jaxpr"])
+        elif prim == "cond":
+            total += max((jaxpr_flops(b) for b in eqn.params["branches"]),
+                         default=0.0)
+        elif "jaxpr" in eqn.params:
+            total += jaxpr_flops(eqn.params["jaxpr"])
+        elif "call_jaxpr" in eqn.params:
+            total += jaxpr_flops(eqn.params["call_jaxpr"])
+        elif prim in ("custom_vjp_call", "custom_jvp_call",
+                      "custom_vjp_call_jaxpr", "checkpoint", "remat",
+                      "remat2", "closed_call", "core_call"):
+            for k in ("fun_jaxpr", "jaxpr", "call_jaxpr"):
+                if k in eqn.params:
+                    total += jaxpr_flops(eqn.params[k])
+                    break
+        else:
+            # elementwise / reduce / gather etc: ~1 flop per output elem
+            for ov in eqn.outvars:
+                aval = getattr(ov, "aval", None)
+                if aval is not None and getattr(aval, "shape", None) is not None \
+                        and _is_float(aval):
+                    total += math.prod(aval.shape)
+    return total
+
+
+def step_flops(fn, *abstract_args) -> float:
+    """Global FLOPs of one call of ``fn`` on the given ShapeDtypeStructs."""
+    import jax
+    closed = jax.make_jaxpr(fn)(*abstract_args)
+    return jaxpr_flops(closed)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing with while-trip multiplication
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_def(line: str) -> Optional[Tuple[str, str, str, str]]:
+    """'%name = TYPE op(args...), attrs' → (name, type, op, rest).
+
+    Handles tuple types containing spaces: '(s32[], f32[8,8]{1,0})'.
+    """
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):            # tuple type: match to balanced )
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        ty = rest[:i + 1]
+        tail = rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        ty = rest[:sp]
+        tail = rest[sp + 1:]
+    mo = re.match(r"([\w\-]+)", tail)
+    if not mo:
+        return None
+    return name, ty, mo.group(1), tail
+
+
+def _split_computations(text: str) -> Dict[str, list]:
+    """Computation name → body lines.  Headers sit at column 0 and end
+    with '{'; bodies are indented; '}' at column 0 closes."""
+    comps: Dict[str, list] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            if not line.startswith(" ") and line.rstrip().endswith("{"):
+                hdr = line.strip()
+                if hdr.startswith("ENTRY"):
+                    hdr = hdr[len("ENTRY"):].strip()
+                m = re.match(r"%?([\w\.\-_]+)", hdr)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+        else:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list) -> int:
+    """Extract N from a scan-style condition: the ROOT op (compare, or a
+    fusion wrapping one) consumes an s32 constant = the trip count."""
+    consts: Dict[str, int] = {}
+    root_line = None
+    for line in cond_lines:
+        p = _parse_def(line)
+        if not p:
+            continue
+        name, ty, op, tail = p
+        if op == "constant":
+            mv = re.search(r"constant\((-?\d+)\)", tail)
+            if mv:
+                consts[name] = int(mv.group(1))
+        if line.strip().startswith("ROOT"):
+            root_line = tail
+    if root_line is not None:
+        paren = root_line.find("(")
+        if paren >= 0:
+            for o in re.findall(r"%([\w\.\-_]+)", root_line[paren:]):
+                if o in consts:
+                    return max(consts[o], 1)
+    vals = [v for v in consts.values() if v > 0]
+    return max(vals) if vals else 1
+
+
+def hlo_collective_bytes(text: str) -> Dict[str, Any]:
+    """Collective operand bytes of the per-device program, with each
+    while-loop body weighted by its trip count (nested loops multiply)."""
+    comps = _split_computations(text)
+
+    # per-computation: symbol sizes, direct collectives, while calls
+    parsed: Dict[str, dict] = {}
+    for cname, lines in comps.items():
+        sizes: Dict[str, int] = {}
+        colls: list = []
+        whiles: list = []
+        calls: list = []
+        for line in lines:
+            p = _parse_def(line)
+            if not p:
+                continue
+            name, ty, op, tail = p
+            sizes[name] = _shape_bytes(ty)
+            base = re.sub(r"\.\d+$", "", op)
+            kind = None
+            if base in _COLLECTIVES:
+                kind = base
+            elif base.endswith("-start") and base[:-6] in _COLLECTIVES:
+                kind = base[:-6]
+            if kind:
+                paren = tail.find("(")
+                args_end = tail.find(")", paren)
+                args = tail[paren:args_end + 1] if paren >= 0 else ""
+                ops = re.findall(r"%([\w\.\-_]+)", args)
+                colls.append((kind, ops, ty))
+            if base == "while":
+                mb = re.search(r"body=%?([\w\.\-_]+)", tail)
+                mc = re.search(r"condition=%?([\w\.\-_]+)", tail)
+                if mb and mc:
+                    whiles.append((mb.group(1), mc.group(1)))
+            else:
+                for mm in re.finditer(
+                        r"(?:calls|branch_computations)="
+                        r"\{?%?([\w\.\-_,% ]+)\}?", tail):
+                    for c in re.findall(r"[\w\.\-_]+", mm.group(1)):
+                        calls.append(c)
+        parsed[cname] = {"sizes": sizes, "colls": colls,
+                        "whiles": whiles, "calls": calls}
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def visit(cname: str) -> Dict[str, float]:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = {k: 0.0 for k in _COLLECTIVES}   # cycle guard
+        if cname not in parsed:
+            return memo[cname]
+        p = parsed[cname]
+        acc = {k: 0.0 for k in _COLLECTIVES}
+        counts = {k: 0 for k in _COLLECTIVES}
+        for kind, ops, ty in p["colls"]:
+            nbytes = sum(p["sizes"].get(o, 0) for o in ops)
+            if nbytes == 0:
+                nbytes = _shape_bytes(ty)
+            acc[kind] += nbytes
+            counts[kind] += 1
+        for body, cond in p["whiles"]:
+            trips = _trip_count(comps.get(cond, []))
+            sub = visit(body)
+            for k in _COLLECTIVES:
+                acc[k] += trips * sub[k]
+        for callee in p["calls"]:
+            if callee in parsed and callee != cname:
+                sub = visit(callee)
+                for k in _COLLECTIVES:
+                    acc[k] += sub[k]
+        memo[cname] = acc
+        return acc
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-_]+)", line)
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None or entry not in parsed:
+        # fall back: sum everything once
+        entry_acc = {k: 0.0 for k in _COLLECTIVES}
+        for cname in parsed:
+            for kind, ops, ty in parsed[cname]["colls"]:
+                nbytes = sum(parsed[cname]["sizes"].get(o, 0) for o in ops)
+                entry_acc[kind] += nbytes or _shape_bytes(ty)
+        acc = entry_acc
+    else:
+        acc = visit(entry)
+    total = sum(acc.values())
+    return {"bytes_by_kind": {k: int(v) for k, v in acc.items()},
+            "total_bytes": int(total)}
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic model
+# ---------------------------------------------------------------------------
+
+def memory_traffic(param_bytes_pd: int, temp_bytes_pd: int,
+                   cache_bytes_pd: int = 0, opt_bytes_pd: int = 0,
+                   microbatches: int = 1) -> int:
+    """Modeled per-chip HBM bytes of one step (lower bound, see module
+    docstring)."""
+    return int(param_bytes_pd * microbatches      # weights streamed per µb
+               + 2 * opt_bytes_pd                 # moments read + written
+               + cache_bytes_pd                   # KV/SSM cache read
+               + 2 * temp_bytes_pd)               # temps written + read

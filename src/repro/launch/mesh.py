@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): 16×16 = 256 chips per pod; the multi-pod variant adds a
+leading pod axis (2 pods = 512 chips).  The pod axis carries pure data
+parallelism (only gradient all-reduces cross the DCN); ``data`` carries
+DP+FSDP; ``model`` carries TP/EP/SP (DESIGN.md §6).
+
+``make_elastic_mesh`` is the resize-aware variant the relaunch path uses:
+given whatever devices exist, it keeps the model axis fixed (the model
+must still fit) and grows/shrinks ``data`` — checkpoints reshard on
+restore (checkpoint/store.py), so elastic scaling is a relaunch, not a
+code change.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(model_parallel: int = 16,
+                      devices: Optional[list] = None) -> Mesh:
+    """Whatever-fits mesh: ``model`` fixed, ``data`` = n_devices / model."""
+    devs = devices if devices is not None else jax.devices()
+    n = len(devs)
+    mp = min(model_parallel, n)
+    while n % mp:
+        mp -= 1
+    return Mesh(np.array(devs[: (n // mp) * mp]).reshape(n // mp, mp),
+                ("data", "model"))
+
+
+def make_host_mesh() -> Mesh:
+    """1×1 mesh over the real local device (smoke tests, examples)."""
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+def mesh_chips(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,119 @@
+"""Model zoo — one dispatch API over every assigned architecture family.
+
+``family(cfg)`` routes to the right assembly:
+  * ``"lm"``     — decoder-only transformer (dense / MoE / VLM-audio stubs)
+  * ``"hybrid"`` — mamba2 / zamba2 (SSM trunk ± shared attention)
+  * ``"encdec"`` — seamless (encoder-decoder)
+
+Batch conventions (what ``data.pipeline`` emits and ``input_specs``
+abstracts):
+  lm      : {"tokens" (B, L) i32, "labels" (B, L) i32}   — or "embeds"
+            (B, L, d) bf16 for input_mode="embeds" frontend stubs
+  hybrid  : {"tokens", "labels"}
+  encdec  : {"src" (B, Ls, d) bf16, "tokens" (B, Lt), "labels" (B, Lt)}
+
+The launcher, trainer and server only speak this API — architecture
+differences live entirely behind it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import transformer as TR
+from repro.models.attention import init_kv_cache
+from repro.models.config import LayerKind, ModelConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def family(cfg: ModelConfig) -> str:
+    if cfg.is_encoder_decoder:
+        return "encdec"
+    if cfg.uses_mamba:
+        return "hybrid"
+    return "lm"
+
+
+# ---------------------------------------------------------------------------
+# Init / loss / forward
+# ---------------------------------------------------------------------------
+
+def init_model(rng: Array, cfg: ModelConfig) -> Params:
+    f = family(cfg)
+    if f == "encdec":
+        return ED.init_encdec(rng, cfg)
+    if f == "hybrid":
+        return HY.init_hybrid_lm(rng, cfg)
+    return TR.init_lm(rng, cfg)
+
+
+def model_loss(params: Params, cfg: ModelConfig, batch: Dict[str, Array],
+               aux_weight: float = 0.01) -> Array:
+    f = family(cfg)
+    if f == "encdec":
+        return ED.encdec_loss(params, cfg, batch["src"], batch["tokens"],
+                              batch["labels"])
+    if f == "hybrid":
+        return HY.hybrid_loss(params, cfg, batch["tokens"], batch["labels"])
+    inputs = batch.get("embeds", batch.get("tokens"))
+    x, _, aux = TR.lm_hidden(params, cfg, inputs)
+    table = params.get("unembed", params["embed"])
+    return TR.chunked_ce(x, table, batch["labels"], cfg) + aux_weight * aux
+
+
+def model_logits(params: Params, cfg: ModelConfig,
+                 batch: Dict[str, Array]) -> Array:
+    f = family(cfg)
+    if f == "encdec":
+        return ED.encdec_apply(params, cfg, batch["src"], batch["tokens"])
+    if f == "hybrid":
+        return HY.hybrid_apply(params, cfg, batch["tokens"])[0]
+    inputs = batch.get("embeds", batch.get("tokens"))
+    return TR.lm_apply(params, cfg, inputs)[0]
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               src_len: Optional[int] = None,
+               dtype=jnp.bfloat16) -> Params:
+    f = family(cfg)
+    if f == "encdec":
+        return ED.init_encdec_cache(cfg, batch, max_len,
+                                    src_len or max_len, dtype)
+    if f == "hybrid":
+        return HY.init_hybrid_cache(cfg, batch, max_len, dtype)
+    return init_kv_cache(cfg, batch, max_len, dtype=dtype)
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Array],
+            cache: Params) -> Tuple[Array, Params]:
+    """Prompt → (last-position logits, filled cache)."""
+    f = family(cfg)
+    if f == "encdec":
+        return ED.encdec_prefill(params, cfg, batch["src"], batch["tokens"],
+                                 cache)
+    if f == "hybrid":
+        return HY.hybrid_prefill(params, cfg, batch["tokens"], cache)
+    inputs = batch.get("embeds", batch.get("tokens"))
+    return TR.lm_prefill(params, cfg, inputs, cache)
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: Array,
+                cache: Params, pos: Array) -> Tuple[Array, Params]:
+    """One token in, next-token logits + updated cache out."""
+    f = family(cfg)
+    if f == "encdec":
+        return ED.encdec_decode_step(params, cfg, token, cache, pos)
+    if f == "hybrid":
+        return HY.hybrid_decode_step(params, cfg, token, cache, pos)
+    return TR.lm_decode_step(params, cfg, token, cache, pos)

@@ -1,0 +1,364 @@
+"""The paper's TinyML benchmark models: VGG16, ResNet-56 (CIFAR-10),
+MobileNetV2 (VWW), DSCNN (GSC keyword spotting).
+
+Two roles:
+
+1. **Cycle-model inputs** (Fig. 10): :func:`layer_shapes` lists every
+   MAC-bearing layer of the *full-size* models as ``cycle_model.LayerShape``
+   entries; ``benchmarks/bench_csa_models`` prunes masks of those shapes
+   and counts CFU cycles.  Conventions (recorded deviations):
+   input channels are padded up to a multiple of 4 (the CFU block width —
+   TFLite pads the same way); depthwise convs are modelled as per-channel
+   tap streams (9 taps → 12 with always-computed pad lanes).
+
+2. **Runnable JAX models** (Table II): init/apply pairs with a ``width``
+   multiplier so reduced versions train in seconds on CPU; the INT7-vs-INT8
+   benchmark quantizes their conv/fc weights through ``core.encoding``.
+   Normalization is batch-stat BatchNorm (no running stats — deterministic
+   for benches; the quantization comparison is invariant to this choice).
+
+Weights layouts: conv HWIO, linear (K, N).  All weight transforms
+(mask / quantize-dequantize) are applied *to the params pytree offline*,
+so the forward pass is format-agnostic — the same co-design flow as the
+LM side.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cycle_model import LayerShape
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _pad4(c: int) -> int:
+    return ((c + 3) // 4) * 4
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+def conv2d(x: Array, w: Array, stride: int = 1, padding: str = "SAME",
+           groups: int = 1) -> Array:
+    """NHWC conv with HWIO weights."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def batchnorm(p: Params, x: Array, eps: float = 1e-5) -> Array:
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + eps)
+    return xn * p["scale"] + p["bias"]
+
+
+def _init_conv(rng, kh, kw, cin, cout, dtype=jnp.float32) -> Array:
+    fan_in = kh * kw * cin
+    return (jax.random.normal(rng, (kh, kw, cin, cout), jnp.float32)
+            * math.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def _init_bn(c) -> Params:
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _init_fc(rng, k, n) -> Params:
+    return {"w": (jax.random.normal(rng, (k, n), jnp.float32)
+                  / math.sqrt(k)),
+            "b": jnp.zeros((n,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# VGG16 (CIFAR-10 variant)
+# ---------------------------------------------------------------------------
+
+VGG16_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+              512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def init_vgg16(rng: Array, num_classes: int = 10, width: float = 1.0,
+               in_ch: int = 3) -> Params:
+    convs = []
+    c = in_ch
+    keys = jax.random.split(rng, 32)
+    ki = 0
+    for v in VGG16_PLAN:
+        if v == "M":
+            continue
+        cout = max(int(v * width), 8)
+        convs.append({"w": _init_conv(keys[ki], 3, 3, c, cout),
+                      "bn": _init_bn(cout)})
+        c = cout
+        ki += 1
+    return {"convs": convs,
+            "fc": _init_fc(keys[ki], c, num_classes)}
+
+
+def apply_vgg16(p: Params, x: Array) -> Array:
+    i = 0
+    for v in VGG16_PLAN:
+        if v == "M":
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        else:
+            layer = p["convs"][i]
+            x = jax.nn.relu(batchnorm(layer["bn"], conv2d(x, layer["w"])))
+            i += 1
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["fc"]["w"] + p["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet-56 (CIFAR)
+# ---------------------------------------------------------------------------
+
+def init_resnet56(rng: Array, num_classes: int = 10, width: float = 1.0,
+                  n_blocks: int = 9, in_ch: int = 3) -> Params:
+    widths = [max(int(w * width), 8) for w in (16, 32, 64)]
+    keys = iter(jax.random.split(rng, 8 + 6 * n_blocks * 2))
+    p: Params = {"stem": {"w": _init_conv(next(keys), 3, 3, in_ch, widths[0]),
+                          "bn": _init_bn(widths[0])},
+                 "stages": []}
+    cin = widths[0]
+    for s, cout in enumerate(widths):
+        blocks = []
+        for b in range(n_blocks):
+            stride = 2 if (s > 0 and b == 0) else 1
+            blk = {"w1": _init_conv(next(keys), 3, 3, cin, cout),
+                   "bn1": _init_bn(cout),
+                   "w2": _init_conv(next(keys), 3, 3, cout, cout),
+                   "bn2": _init_bn(cout)}
+            if stride != 1 or cin != cout:
+                blk["proj"] = _init_conv(next(keys), 1, 1, cin, cout)
+            blocks.append(blk)
+            cin = cout
+        p["stages"].append(blocks)
+    p["fc"] = _init_fc(next(keys), cin, num_classes)
+    return p
+
+
+def apply_resnet56(p: Params, x: Array) -> Array:
+    x = jax.nn.relu(batchnorm(p["stem"]["bn"], conv2d(x, p["stem"]["w"])))
+    for si, stage in enumerate(p["stages"]):
+        for bi, blk in enumerate(stage):
+            stride = 2 if (si > 0 and bi == 0) else 1   # structural, not a leaf
+            h = jax.nn.relu(batchnorm(
+                blk["bn1"], conv2d(x, blk["w1"], stride=stride)))
+            h = batchnorm(blk["bn2"], conv2d(h, blk["w2"]))
+            sc = conv2d(x, blk["proj"], stride=stride) \
+                if "proj" in blk else x
+            x = jax.nn.relu(h + sc)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["fc"]["w"] + p["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2 (VWW: 96×96, 2 classes)
+# ---------------------------------------------------------------------------
+
+MBV2_PLAN = [  # (expansion t, out channels c, repeats n, stride s)
+    (1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+    (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1),
+]
+
+
+def init_mobilenetv2(rng: Array, num_classes: int = 2, width: float = 1.0,
+                     in_ch: int = 3) -> Params:
+    keys = iter(jax.random.split(rng, 256))
+
+    def ch(c):
+        return max(int(c * width), 8)
+
+    p: Params = {"stem": {"w": _init_conv(next(keys), 3, 3, in_ch, ch(32)),
+                          "bn": _init_bn(ch(32))},
+                 "blocks": []}
+    cin = ch(32)
+    for t, c, n, s in MBV2_PLAN:
+        for i in range(n):
+            stride = s if i == 0 else 1
+            cout = ch(c)
+            hidden = cin * t
+            blk: Params = {}
+            if t != 1:
+                blk["expand"] = {"w": _init_conv(next(keys), 1, 1, cin, hidden),
+                                 "bn": _init_bn(hidden)}
+            blk["dw"] = {"w": _init_conv(next(keys), 3, 3, 1, hidden),
+                         "bn": _init_bn(hidden)}
+            blk["project"] = {"w": _init_conv(next(keys), 1, 1, hidden, cout),
+                              "bn": _init_bn(cout)}
+            p["blocks"].append(blk)
+            cin = cout
+    head = ch(1280)
+    p["head"] = {"w": _init_conv(next(keys), 1, 1, cin, head),
+                 "bn": _init_bn(head)}
+    p["fc"] = _init_fc(next(keys), head, num_classes)
+    return p
+
+
+def apply_mobilenetv2(p: Params, x: Array) -> Array:
+    x = jax.nn.relu6(batchnorm(p["stem"]["bn"],
+                               conv2d(x, p["stem"]["w"], stride=2)))
+    strides = [s if i == 0 else 1
+               for t, c, n, s in MBV2_PLAN for i in range(n)]
+    for blk, stride in zip(p["blocks"], strides):
+        h = x
+        if "expand" in blk:
+            h = jax.nn.relu6(batchnorm(blk["expand"]["bn"],
+                                       conv2d(h, blk["expand"]["w"])))
+        hidden = h.shape[-1]
+        h = jax.nn.relu6(batchnorm(
+            blk["dw"]["bn"],
+            conv2d(h, blk["dw"]["w"], stride=stride, groups=hidden)))
+        h = batchnorm(blk["project"]["bn"], conv2d(h, blk["project"]["w"]))
+        use_res = stride == 1 and x.shape[-1] == h.shape[-1]
+        x = x + h if use_res else h
+    x = jax.nn.relu6(batchnorm(p["head"]["bn"], conv2d(x, p["head"]["w"])))
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["fc"]["w"] + p["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# DSCNN (keyword spotting, GSC: 49×10 MFCC input)
+# ---------------------------------------------------------------------------
+
+def init_dscnn(rng: Array, num_classes: int = 12, width: float = 1.0,
+               n_ds_blocks: int = 4, in_ch: int = 1) -> Params:
+    keys = iter(jax.random.split(rng, 32))
+    c = max(int(64 * width), 8)
+    p: Params = {"stem": {"w": _init_conv(next(keys), 10, 4, in_ch, c),
+                          "bn": _init_bn(c)},
+                 "blocks": []}
+    for _ in range(n_ds_blocks):
+        p["blocks"].append({
+            "dw": {"w": _init_conv(next(keys), 3, 3, 1, c), "bn": _init_bn(c)},
+            "pw": {"w": _init_conv(next(keys), 1, 1, c, c), "bn": _init_bn(c)},
+        })
+    p["fc"] = _init_fc(next(keys), c, num_classes)
+    return p
+
+
+def apply_dscnn(p: Params, x: Array) -> Array:
+    x = jax.nn.relu(batchnorm(p["stem"]["bn"],
+                              conv2d(x, p["stem"]["w"], stride=2)))
+    for blk in p["blocks"]:
+        c = x.shape[-1]
+        x = jax.nn.relu(batchnorm(blk["dw"]["bn"],
+                                  conv2d(x, blk["dw"]["w"], groups=c)))
+        x = jax.nn.relu(batchnorm(blk["pw"]["bn"], conv2d(x, blk["pw"]["w"])))
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["fc"]["w"] + p["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Registry + cycle-model layer shapes (full-size models, Fig. 10 inputs)
+# ---------------------------------------------------------------------------
+
+CNN_ZOO: Dict[str, Tuple[Callable, Callable]] = {
+    "vgg16": (init_vgg16, apply_vgg16),
+    "resnet56": (init_resnet56, apply_resnet56),
+    "mobilenetv2": (init_mobilenetv2, apply_mobilenetv2),
+    "dscnn": (init_dscnn, apply_dscnn),
+}
+
+
+def _conv_shape(kh, kw, cin, cout, oh, ow) -> LayerShape:
+    return LayerShape("conv", (kh, kw, _pad4(cin), cout), (oh, ow))
+
+
+def _dw_shape(kh, kw, c, oh, ow) -> LayerShape:
+    """Depthwise conv as per-channel tap streams (taps padded to ×4)."""
+    return LayerShape("conv", (1, 1, _pad4(kh * kw), c), (oh, ow))
+
+
+def layer_shapes(model: str) -> List[LayerShape]:
+    """MAC-bearing layers of the full-size paper models (input resolutions:
+    CIFAR 32², VWW 96², GSC 49×10)."""
+    if model == "vgg16":
+        out, c, hw = [], 3, 32
+        for v in VGG16_PLAN:
+            if v == "M":
+                hw //= 2
+            else:
+                out.append(_conv_shape(3, 3, c, v, hw, hw))
+                c = v
+        out.append(LayerShape("linear", (_pad4(c), 10)))
+        return out
+    if model == "resnet56":
+        out, cin, hw = [_conv_shape(3, 3, 3, 16, 32, 32)], 16, 32
+        for s, cout in enumerate((16, 32, 64)):
+            for b in range(9):
+                stride = 2 if (s > 0 and b == 0) else 1
+                hw = hw // stride
+                out.append(_conv_shape(3, 3, cin, cout, hw, hw))
+                out.append(_conv_shape(3, 3, cout, cout, hw, hw))
+                if stride != 1 or cin != cout:
+                    out.append(_conv_shape(1, 1, cin, cout, hw, hw))
+                cin = cout
+        out.append(LayerShape("linear", (64, 10)))
+        return out
+    if model == "mobilenetv2":
+        out, cin, hw = [_conv_shape(3, 3, 3, 32, 48, 48)], 32, 48
+        for t, c, n, s in MBV2_PLAN:
+            for i in range(n):
+                stride = s if i == 0 else 1
+                hidden = cin * t
+                if t != 1:
+                    out.append(_conv_shape(1, 1, cin, hidden, hw, hw))
+                hw = hw // stride
+                out.append(_dw_shape(3, 3, hidden, hw, hw))
+                out.append(_conv_shape(1, 1, hidden, c, hw, hw))
+                cin = c
+        out.append(_conv_shape(1, 1, cin, 1280, hw, hw))
+        out.append(LayerShape("linear", (1280, 2)))
+        return out
+    if model == "dscnn":
+        out = [_conv_shape(10, 4, 1, 64, 25, 5)]
+        for _ in range(4):
+            out.append(_dw_shape(3, 3, 64, 25, 5))
+            out.append(_conv_shape(1, 1, 64, 64, 25, 5))
+        out.append(LayerShape("linear", (64, 12)))
+        return out
+    raise ValueError(f"unknown model {model!r}; one of {list(CNN_ZOO)}")
+
+
+# ---------------------------------------------------------------------------
+# Offline weight transforms (prune / quantize) over a CNN params pytree
+# ---------------------------------------------------------------------------
+
+def _is_weight(path: Tuple, leaf: Array) -> bool:
+    """Conv/fc kernels only (≥2D float leaves named 'w*')."""
+    names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    last = str(names[-1]) if names else ""
+    return leaf.ndim >= 2 and last.startswith("w")
+
+
+def map_weights(params: Params, fn: Callable[[Array], Array]) -> Params:
+    """Apply ``fn`` to every conv/fc kernel leaf; leave norms/bias alone."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(leaf) if _is_weight(path, leaf) else leaf,
+        params)
+
+
+def quantize_dequantize(params: Params, bits7: bool) -> Params:
+    """Fake-quantize weights through INT8 or INT7 (Table II comparison)."""
+    from repro.core import encoding
+
+    def qdq(w: Array) -> Array:
+        flat = w.reshape(-1, w.shape[-1])
+        if bits7:
+            q, scale = encoding.quantize_int7(flat, axis=0)
+        else:
+            q, scale = encoding.quantize_int8(flat, axis=0)
+        return (q.astype(jnp.float32) * scale).reshape(w.shape)
+
+    return map_weights(params, qdq)

@@ -1,0 +1,231 @@
+"""Unified model configuration covering every assigned architecture family.
+
+One dataclass describes dense, MoE, SSM, hybrid, enc-dec and VLM/audio
+backbones; per-family fields are simply unused elsewhere.  Configs are
+plain frozen dataclasses so they hash (static args of jitted steps) and
+print reproducibly into EXPERIMENTS.md.
+
+Layer heterogeneity (gemma local:global patterns, zamba2 mamba:attn
+interleave) is expressed as ``layer_kinds`` — a per-layer tuple of
+:class:`LayerKind` — so a single ``lax.scan`` with per-layer scalar flags
+runs every family (compile time stays O(1) in depth, which is what lets
+the 80-layer dry-run cells compile quickly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Optional, Tuple
+
+from repro.core.sparse_linear import SparsityConfig, DENSE
+
+
+class LayerKind(enum.IntEnum):
+    """What sequence mixer a layer uses (scanned as an int32 flag)."""
+    ATTN_GLOBAL = 0      # full causal attention
+    ATTN_LOCAL = 1       # sliding-window attention
+    MAMBA = 2            # Mamba-2 SSD block
+    SHARED_ATTN = 3      # zamba2: the *shared* attention block is applied
+                         # before this (mamba) layer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab_size: int
+
+    # --- attention ---
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0                    # 0 → d_model // n_heads
+    qk_norm: bool = False                # qwen3
+    attn_softcap: Optional[float] = None  # gemma2 (50.0)
+    final_softcap: Optional[float] = None  # gemma2 (30.0)
+    window_size: Optional[int] = None    # sliding window for local layers
+    rope_theta: float = 10_000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+
+    # --- mlp ---
+    d_ff: int = 0
+    mlp_gated: bool = True               # SwiGLU/GeGLU vs plain
+
+    # --- layer pattern ---
+    layer_kinds: Tuple[int, ...] = ()    # defaults to all ATTN_GLOBAL
+
+    # --- MoE ---
+    n_experts: int = 0                   # 0 → dense MLP
+    n_shared_experts: int = 0            # qwen2-moe: always-on experts
+    top_k: int = 0
+    d_expert: int = 0                    # 0 → d_ff
+    moe_sharding: str = "ep"             # "ep" (experts over model axis) |
+                                         # "tp" (expert-internal over model)
+    moe_impl: str = "grouped"            # "dense" (all-experts baseline) |
+                                         # "grouped" (GShard capacity dispatch)
+    capacity_factor: float = 1.25
+    moe_group: int = 4096                # GShard token-group size S
+
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0                   # N (state dim per head)
+    ssm_heads: int = 0                   # H; 0 → d_inner // ssm_head_dim
+    ssm_head_dim: int = 64               # P
+    ssm_expand: int = 2                  # d_inner = expand * d_model
+    ssm_groups: int = 1                  # B/C groups (G)
+    ssm_conv: int = 4                    # short conv window
+    ssm_chunk: int = 256                 # SSD chunk length
+
+    # --- enc-dec (seamless) ---
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+
+    # --- modality frontend stub ---
+    input_mode: str = "tokens"           # "tokens" | "embeds" (audio/vlm stub)
+
+    # --- norms / embeddings ---
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    embed_scale: bool = False            # gemma multiplies embeds by sqrt(d)
+    post_norm: bool = False              # gemma2/3: extra norm after mixer/mlp
+
+    # --- sparsity (the paper's technique, per layer family) ---
+    mlp_sparsity: SparsityConfig = DENSE
+    attn_sparsity: SparsityConfig = DENSE
+    expert_sparsity: SparsityConfig = DENSE
+
+    # --- numerics / distribution ---
+    dtype: str = "bfloat16"
+    remat: bool = True                   # checkpoint each scanned layer
+    remat_policy: str = "full"           # "full" | "dots" (save matmul
+                                         # outputs, recompute elementwise)
+    scan_layers: bool = True
+
+    def __post_init__(self):
+        if not self.layer_kinds:
+            object.__setattr__(
+                self, "layer_kinds",
+                tuple([int(LayerKind.ATTN_GLOBAL)] * self.n_layers))
+        if len(self.layer_kinds) != self.n_layers:
+            raise ValueError(
+                f"layer_kinds has {len(self.layer_kinds)} entries for "
+                f"{self.n_layers} layers")
+        if self.n_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_experts and not self.d_expert:
+            object.__setattr__(self, "d_expert", self.d_ff)
+
+    # ---- derived quantities --------------------------------------------
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.ssm_heads or self.d_inner // self.ssm_head_dim
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a 512 multiple so ("model" TP × 128-lane)
+        sharding always divides (e.g. seamless's 256206 → 256512)."""
+        return math.ceil(self.vocab_size / 512) * 512
+
+    @property
+    def uses_mamba(self) -> bool:
+        return any(k in (LayerKind.MAMBA, LayerKind.SHARED_ATTN)
+                   for k in self.layer_kinds)
+
+    @property
+    def uses_attention(self) -> bool:
+        return any(k in (LayerKind.ATTN_GLOBAL, LayerKind.ATTN_LOCAL,
+                         LayerKind.SHARED_ATTN)
+                   for k in self.layer_kinds)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when decoding at 500k context is feasible: every attention
+        layer is windowed or the model is (mostly) attention-free."""
+        kinds = [LayerKind(k) for k in self.layer_kinds]
+        n_global = sum(k == LayerKind.ATTN_GLOBAL for k in kinds)
+        n_total = len(kinds)
+        # mamba/hybrid: fine. few-global (gemma3 5:1): KV for global layers
+        # is O(L) but there are few of them and batch=1 — allowed.
+        return n_global <= max(1, n_total // 5)
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6·N·D)."""
+        d, V = self.d_model, self.vocab_size
+        n = V * d  # embed
+        if not self.tie_embeddings:
+            n += V * d
+        per_attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        ff = self.d_ff
+        per_mlp = d * ff * (3 if self.mlp_gated else 2)
+        per_expert = d * self.d_expert * (3 if self.mlp_gated else 2)
+        per_moe = self.n_experts * per_expert + d * self.n_experts \
+            + self.n_shared_experts * per_expert
+        if self.uses_mamba:
+            di, N, H = self.d_inner, self.ssm_state, self.n_ssm_heads
+            G = self.ssm_groups
+            per_mamba = d * (2 * di + 2 * G * N + H) + di * d \
+                + self.ssm_conv * (di + 2 * G * N)
+        kinds = [LayerKind(k) for k in self.layer_kinds]
+        for k in kinds:
+            if k in (LayerKind.ATTN_GLOBAL, LayerKind.ATTN_LOCAL):
+                n += per_attn + (per_moe if self.n_experts else per_mlp)
+            elif k == LayerKind.MAMBA:
+                n += per_mamba
+            elif k == LayerKind.SHARED_ATTN:
+                n += per_mamba  # the shared attn params are counted once:
+        if LayerKind.SHARED_ATTN in kinds:
+            n += per_attn + per_mlp
+        if self.is_encoder_decoder:
+            # encoder self-attn + mlp, decoder cross-attn
+            n += self.n_encoder_layers * (per_attn + per_mlp)
+            n += self.n_layers * per_attn          # cross-attention
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        per_expert = d * self.d_expert * (3 if self.mlp_gated else 2)
+        inactive = (self.n_experts - self.top_k) * per_expert
+        n_moe_layers = sum(
+            1 for k in self.layer_kinds
+            if LayerKind(k) in (LayerKind.ATTN_GLOBAL, LayerKind.ATTN_LOCAL))
+        return self.param_count() - n_moe_layers * inactive
+
+
+def interleave_kinds(n_layers: int, local: int, global_: int,
+                     window_first: bool = True) -> Tuple[int, ...]:
+    """gemma-style ``local:global`` repeating pattern (e.g. 5:1)."""
+    pat = ([int(LayerKind.ATTN_LOCAL)] * local
+           + [int(LayerKind.ATTN_GLOBAL)] * global_)
+    if not window_first:
+        pat = pat[::-1]
+    out = (pat * math.ceil(n_layers / len(pat)))[:n_layers]
+    return tuple(out)
+
+
+def zamba_kinds(n_layers: int, shared_every: int = 6) -> Tuple[int, ...]:
+    """zamba2: mamba backbone with the shared attention block applied
+    every ``shared_every`` layers (starting at the first slot)."""
+    out = []
+    for i in range(n_layers):
+        if i % shared_every == shared_every // 2:
+            out.append(int(LayerKind.SHARED_ATTN))
+        else:
+            out.append(int(LayerKind.MAMBA))
+    return tuple(out)

@@ -1,0 +1,236 @@
+"""Hybrid / SSM LM assemblies: zamba2 (Mamba-2 backbone + *shared*
+attention block) and pure mamba2.
+
+zamba2 (arXiv:2411.15242) runs a Mamba-2 backbone and applies one globally
+*shared* transformer block (attention + MLP, one set of weights) every few
+layers — parameter-cheap global mixing over an attention-free trunk.  We
+implement the shared block faithfully as shared weights; the paper's
+per-invocation LoRA deltas are omitted (noted in DESIGN.md §model-notes) —
+they are a parameter-efficiency refinement orthogonal to the systems
+contribution here.
+
+Layer pattern comes from ``cfg.layer_kinds``: ``MAMBA`` layers form the
+trunk; a ``SHARED_ATTN`` entry means "apply the shared attention block,
+then this (mamba) layer".  Pure mamba2 is the special case with no
+``SHARED_ATTN`` entries.
+
+Scan structure: mamba layers are stacked and scanned in *runs* between
+shared-block applications (run boundaries are static), so compile time is
+O(#runs) and the KV cache exists only for the handful of shared slots —
+at 500k context this is what makes the long-context decode cell fit:
+SSM state is O(1) in L and KV memory is ``n_shared_slots``-fold, not
+``n_layers``-fold.
+
+Sparsity: the Mamba in/out projections (≈85% of trunk params) and the
+shared block's projections dispatch through ``apply_linear`` — the paper's
+formats apply to every weight matmul; the SSD recurrence itself has no
+weight matmul to sparsify (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.attention import attention, init_attention
+from repro.models.config import LayerKind, ModelConfig
+from repro.models.ssm import init_mamba, init_ssm_cache, mamba_block
+from repro.models.transformer import mask_vocab_padding
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def shared_slots(cfg: ModelConfig) -> List[int]:
+    """Layer indices where the shared attention block fires (before the
+    mamba layer at that index)."""
+    return [i for i, k in enumerate(cfg.layer_kinds)
+            if LayerKind(k) == LayerKind.SHARED_ATTN]
+
+
+def _runs(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    """Static (lo, hi) mamba-layer runs between shared-block applications."""
+    slots = shared_slots(cfg)
+    bounds = [0] + slots + [cfg.n_layers]
+    return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)
+            if bounds[i] < bounds[i + 1]]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_hybrid_lm(rng: Array, cfg: ModelConfig) -> Params:
+    dtype = L._dtype(cfg.dtype)
+    k_embed, k_trunk, k_shared = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_trunk, cfg.n_layers)
+
+    def one_layer(k):
+        p = init_mamba(k, cfg, dtype=dtype)
+        p["ln"] = L.init_rmsnorm(cfg.d_model)
+        return p
+
+    p: Params = {
+        "embed": L.init_embedding(k_embed, cfg.vocab_padded, cfg.d_model,
+                                  dtype),
+        "mamba": jax.vmap(one_layer)(layer_keys),
+        "ln_final": L.init_rmsnorm(cfg.d_model),
+    }
+    if shared_slots(cfg):
+        ks = jax.random.split(k_shared, 2)
+        p["shared"] = {
+            "ln_attn": L.init_rmsnorm(cfg.d_model),
+            "attn": init_attention(ks[0], cfg, dtype=dtype),
+            "ln_mlp": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                              gated=cfg.mlp_gated, dtype=dtype),
+        }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.init_embedding(
+            jax.random.fold_in(k_embed, 1), cfg.vocab_padded, cfg.d_model,
+            dtype)
+    return p
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Params:
+    """{"ssm": stacked(n_layers) conv+state, "kv": (n_shared, B, S, Hk, D)}.
+
+    KV exists only for the shared slots — the memory shape that makes
+    500k-context decode feasible for this family.
+    """
+    cache: Params = {"ssm": init_ssm_cache(cfg, batch)}
+    n_shared = len(shared_slots(cfg))
+    if n_shared:
+        shape = (n_shared, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        cache["kv"] = {"k": jnp.zeros(shape, dtype),
+                       "v": jnp.zeros(shape, dtype)}
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+def _slice_tree(tree, lo: int, hi: int):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def _scan_run(params_run: Params, cfg: ModelConfig, x: Array,
+              cache_run: Optional[Params], remat: bool
+              ) -> Tuple[Array, Optional[Params]]:
+    """lax.scan over one contiguous run of mamba layers."""
+
+    def body(x, xs):
+        p_layer, cache_layer = xs
+        h = L.rmsnorm(p_layer["ln"], x, cfg.norm_eps)
+        out, new_cache = mamba_block(p_layer, cfg, h, cache=cache_layer,
+                                     sparsity=cfg.mlp_sparsity)
+        return x + out, new_cache
+
+    body_fn = jax.checkpoint(body) if remat else body
+    return jax.lax.scan(body_fn, x, (params_run, cache_run))
+
+
+def hybrid_apply(params: Params, cfg: ModelConfig, inputs: Array,
+                 positions: Optional[Array] = None,
+                 cache: Optional[Params] = None,
+                 cache_pos=None, last_only: bool = False
+                 ) -> Tuple[Array, Optional[Params], Array]:
+    """Tokens → logits for mamba2/zamba2.  Same contract as ``lm_apply``."""
+    x, new_cache = hybrid_hidden(params, cfg, inputs, positions, cache,
+                                 cache_pos)
+    if last_only:
+        x = x[:, -1:]
+    table = params.get("unembed", params["embed"])
+    logits = L.unembed(table, x, softcap=cfg.final_softcap)
+    return logits, new_cache, jnp.zeros((), jnp.float32)
+
+
+def hybrid_hidden(params: Params, cfg: ModelConfig, inputs: Array,
+                  positions: Optional[Array] = None,
+                  cache: Optional[Params] = None,
+                  cache_pos=None) -> Tuple[Array, Optional[Params]]:
+    """The shared trunk: tokens → final (normed) hidden states."""
+    B, Lq = inputs.shape[:2]
+    x = L.embed(params["embed"], inputs, scale=cfg.embed_scale)
+    if positions is None:
+        base = jnp.arange(Lq)
+        if cache_pos is not None:
+            base = base + cache_pos
+        positions = jnp.broadcast_to(base, (B, Lq))
+
+    remat = cfg.remat and cache is None
+    runs = _runs(cfg)
+    slots = shared_slots(cfg)
+    ssm_cache = cache["ssm"] if cache is not None else None
+    kv_cache = cache.get("kv") if cache is not None else None
+
+    new_ssm: list = []
+    new_kv_k: list = []
+    new_kv_v: list = []
+    for r, (lo, hi) in enumerate(runs):
+        # shared attention block before this run (except before run 0
+        # unless layer 0 is itself a shared slot)
+        if lo in slots:
+            s = slots.index(lo)
+            sp = params["shared"]
+            h = L.rmsnorm(sp["ln_attn"], x, cfg.norm_eps)
+            layer_kv = (None if kv_cache is None else
+                        {"k": kv_cache["k"][s], "v": kv_cache["v"][s]})
+            attn_out, new_layer_kv = attention(
+                sp["attn"], cfg, h, positions,
+                cache=layer_kv, cache_pos=cache_pos,
+                sparsity=cfg.attn_sparsity)
+            x = x + attn_out
+            h = L.rmsnorm(sp["ln_mlp"], x, cfg.norm_eps)
+            x = x + L.mlp(sp["mlp"], h, gated=cfg.mlp_gated,
+                          sparsity=cfg.mlp_sparsity)
+            if new_layer_kv is not None:
+                new_kv_k.append(new_layer_kv["k"])
+                new_kv_v.append(new_layer_kv["v"])
+        run_cache = (None if ssm_cache is None
+                     else _slice_tree(ssm_cache, lo, hi))
+        x, run_new_cache = _scan_run(
+            _slice_tree(params["mamba"], lo, hi), cfg, x, run_cache, remat)
+        if run_new_cache is not None and ssm_cache is not None:
+            new_ssm.append(run_new_cache)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_ssm)}
+        if kv_cache is not None:
+            new_cache["kv"] = {"k": jnp.stack(new_kv_k),
+                               "v": jnp.stack(new_kv_v)}
+
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return x, new_cache
+
+
+def hybrid_loss(params: Params, cfg: ModelConfig, tokens: Array,
+                labels: Array) -> Array:
+    """Mean next-token CE via the vocab-chunked logsumexp (no logits
+    tensor — see transformer.chunked_ce)."""
+    from repro.models.transformer import chunked_ce
+    x, _ = hybrid_hidden(params, cfg, tokens)
+    table = params.get("unembed", params["embed"])
+    return chunked_ce(x, table, labels, cfg)
+
+
+def hybrid_prefill(params: Params, cfg: ModelConfig, inputs: Array,
+                   cache: Params) -> Tuple[Array, Params]:
+    logits, new_cache, _ = hybrid_apply(
+        params, cfg, inputs, cache=cache, cache_pos=jnp.zeros((), jnp.int32),
+        last_only=True)
+    return logits[:, -1], new_cache
+
+
+def hybrid_decode_step(params: Params, cfg: ModelConfig, token: Array,
+                       cache: Params, pos: Array) -> Tuple[Array, Params]:
+    logits, new_cache, _ = hybrid_apply(
+        params, cfg, token[:, None], cache=cache, cache_pos=pos)
+    return logits[:, 0], new_cache

@@ -1,0 +1,327 @@
+"""Mixture-of-Experts block (qwen2-moe / dbrx style).
+
+Top-k routed experts + optional always-on shared experts.  Dispatch is the
+dense one-hot einsum formulation — the standard SPMD-friendly form: XLA
+partitions the ``(tokens, experts)`` contractions over the mesh and inserts
+the all-to-all/all-gather collectives itself, which the roofline pass then
+measures.  Expert weights are stacked ``(E, d, ff)`` so they shard either
+over the expert axis (EP, ``moe_sharding="ep"``) or expert-internally
+(TP, ``"tp"`` — used when E doesn't divide the model-axis extent, e.g.
+qwen2-moe's 60 experts on a 16-wide axis).
+
+The paper's technique composes *inside* each expert: ``expert_sparsity``
+declares an N:M or block format for the expert FFN matmuls — expert-level
+routing is the coarse sparsity the paper contrasts with, intra-expert
+semi-structured/unstructured sparsity is the fine-grained kind it
+accelerates (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_linear import DENSE, SparsityConfig, apply_linear
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_moe(rng: Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, ff, E = cfg.d_model, cfg.d_expert, cfg.n_experts
+    ks = jax.random.split(rng, 5)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    def stack(key, shape):
+        return (jax.random.normal(key, shape, jnp.float32) * scale
+                ).astype(dtype)
+
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32)
+                   * scale).astype(jnp.float32),       # router in f32
+        "w_in": stack(ks[1], (E, d, ff)),
+        "w_gate": stack(ks[2], (E, d, ff)),
+        "w_out": stack(ks[3], (E, ff, d)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], d, ff * cfg.n_shared_experts,
+                                 gated=cfg.mlp_gated, dtype=dtype)
+    return p
+
+
+def route_topk(logits: Array, k: int) -> Tuple[Array, Array]:
+    """(T, E) router logits → (combine (T, E) float, dispatch (T, E) bool).
+
+    Softmax over the top-k experts only (qwen2-moe/dbrx normalization).
+    """
+    vals, idx = jax.lax.top_k(logits, k)                       # (T, k)
+    gates = jax.nn.softmax(vals, axis=-1)                      # (T, k)
+    combine = jnp.zeros_like(logits).at[
+        jnp.arange(logits.shape[0])[:, None], idx].set(gates)
+    return combine, combine > 0
+
+
+def moe(params: Params, cfg: ModelConfig, x: Array,
+        sparsity: SparsityConfig = DENSE) -> Tuple[Array, Array]:
+    """x (B, L, d) → (out (B, L, d), aux_loss scalar).
+
+    Dense dispatch: every expert sees every token's activation masked by its
+    combine weight — compute is ``O(T·E·d·ff)`` *in the einsum expression*
+    but XLA's SPMD partitioner shards E over the mesh so per-device compute
+    is ``O(T·E/ep·…)``; with top-k ≪ E the optimized path (§Perf) replaces
+    this with a sorted-scatter dispatch.  Aux loss is the standard
+    load-balancing term (Switch-style).
+    """
+    B, Lq, d = x.shape
+    T = B * Lq
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32) @ params["router"])       # (T, E)
+    combine, dispatch = route_topk(logits, cfg.top_k)
+
+    # load-balance aux loss: E * sum_e (frac_tokens_e * frac_prob_e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = jnp.mean(dispatch.astype(jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(frac_tokens * frac_probs)
+
+    # expert FFNs (gated): h_e = silu(x W_g,e) * (x W_i,e); y_e = h_e W_o,e
+    xe = xt.astype(params["w_in"].dtype)
+    h_in = jnp.einsum("td,edf->etf", xe, params["w_in"])
+    h_gate = jnp.einsum("td,edf->etf", xe, params["w_gate"])
+    h = jax.nn.silu(h_gate.astype(jnp.float32)).astype(h_in.dtype) * h_in
+    y_e = jnp.einsum("etf,efd->etd", h, params["w_out"])       # (E, T, d)
+    y = jnp.einsum("etd,te->td", y_e.astype(jnp.float32),
+                   combine).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        y = y + L.mlp(params["shared"], xt, gated=cfg.mlp_gated,
+                      sparsity=sparsity)
+    return y.reshape(B, Lq, d), aux
+
+
+def moe_grouped(params: Params, cfg: ModelConfig, x: Array,
+                sparsity: SparsityConfig = DENSE,
+                capacity_factor: float = 1.25,
+                group_size: int = 4096) -> Tuple[Array, Array]:
+    """GShard-style capacity-based dispatch: FLOPs ∝ top_k/E of dense.
+
+    Tokens are cut into groups of ``S = group_size``; per group each expert
+    accepts at most ``C = ceil(S·top_k/E·capacity_factor)`` tokens (overflow
+    is dropped — standard Switch behaviour; the aux loss keeps the router
+    balanced so drops are rare).  Dispatch/combine are one-hot einsums —
+    the exact GShard formulation XLA's SPMD partitioner turns into
+    all-to-alls over the expert axis.  This is the production path; the
+    dense dispatch above is the correctness baseline (§Perf records the
+    useful-FLOP ratio jump between them).
+    """
+    B, Lq, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * Lq
+    S = min(group_size, T)
+    if T % S:
+        S = T            # fall back to one group (small inputs)
+    G = T // S
+    C = max(int(math.ceil(S * k / E * capacity_factor)), 1)
+
+    xt = x.reshape(G, S, d)
+    logits = xt.astype(jnp.float32) @ params["router"]          # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k gates, normalized over the chosen k (qwen2-moe/dbrx convention)
+    vals, eidx = jax.lax.top_k(logits, k)                       # (G, S, k)
+    gates = jax.nn.softmax(vals, axis=-1)
+
+    # position of each (token, slot) in its expert's queue: rank tokens by
+    # slot-major order (slot 0 assignments first — they carry the largest
+    # gates, so overflow drops the least important routes).
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)           # (G, S, k, E)
+    slotmajor = onehot.transpose(0, 2, 1, 3).reshape(G, k * S, E)
+    pos_sm = jnp.cumsum(slotmajor, axis=1) - slotmajor          # (G, kS, E)
+    pos = pos_sm.reshape(G, k, S, E).transpose(0, 2, 1, 3)      # (G, S, k, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                        # (G, S, k)
+    keep = pos < C
+    gates = gates * keep
+
+    # aux loss (per group, Switch-style), computed before dropping
+    frac_tokens = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=2), axis=1)
+    frac_probs = jnp.mean(probs, axis=1)                        # (G, E)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+
+    # dispatch one-hot (G, S, E, C): token s → (expert, position)
+    disp = (jax.nn.one_hot(eidx, E, dtype=jnp.float32)[..., None]
+            * jax.nn.one_hot(pos, C, dtype=jnp.float32)[..., None, :]
+            * keep[..., None, None].astype(jnp.float32))        # (G,S,k,E,C)
+    comb = jnp.sum(disp * gates[..., None, None], axis=2)       # (G, S, E, C)
+    disp = jnp.sum(disp, axis=2)
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp.astype(xt.dtype), xt)  # (G,E,C,d)
+    h_in = jnp.einsum("gecd,edf->gecf", xe, params["w_in"])
+    h_gate = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+    h = jax.nn.silu(h_gate.astype(jnp.float32)).astype(h_in.dtype) * h_in
+    y_e = jnp.einsum("gecf,efd->gecd", h, params["w_out"])      # (G, E, C, d)
+    y = jnp.einsum("gsec,gecd->gsd", comb.astype(jnp.float32),
+                   y_e.astype(jnp.float32)).astype(x.dtype)
+
+    y = y.reshape(B, Lq, d)
+    if cfg.n_shared_experts:
+        y = y + L.mlp(params["shared"], x, gated=cfg.mlp_gated,
+                      sparsity=sparsity)
+    return y, aux
+
+
+def moe_sorted(params: Params, cfg: ModelConfig, x: Array,
+               sparsity: SparsityConfig = DENSE,
+               capacity_factor: float = 1.25,
+               group_size: int = 4096) -> Tuple[Array, Array]:
+    """Group-local sort-based capacity dispatch — the production path.
+
+    Two known failure modes shape this implementation:
+      * the GShard one-hot dispatch tensor ``(G, S, E, C)`` is ~80 TB at
+        train_4k scale (memory);
+      * a *flat* sort-based dispatch scatters tokens into a global
+        ``(E·C, d)`` buffer whose slot indices ignore data-shard locality
+        — GSPMD then lowers the scatter/gather to full-tensor all-reduces
+        (measured: 12.9 GB × layers × µbatches on dbrx, EXPERIMENTS.md
+        §Perf prelude).
+
+    The fix is GShard's *grouping* without its one-hot: tokens are cut
+    into groups of ``S = group_size`` aligned with the data axis
+    (``constrain(xg, BATCH, ...)``); routing, capacity (per group,
+    ``C = S·k/E·cf``), scatter and combine all stay **within a group** —
+    zero cross-shard traffic; the only resharding is the expert einsum
+    itself, where GSPMD converts group-sharding → expert-sharding (the
+    EP all-to-all, exactly the collective the paper's Table-I "HW"
+    accelerators avoid and CPU+HW designs pay).
+
+    Exact-equal to the dense dispatch when capacity is ample (tested).
+    """
+    from repro.distributed.annotate import batch_axes, constrain
+
+    BATCH = batch_axes()
+
+    B, Lq, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * Lq
+    S = min(group_size, T)
+    while T % S:
+        S //= 2
+    G = T // S
+    C = max(int(math.ceil(S * k / E * capacity_factor)), 1)
+
+    xg = constrain(x.reshape(G, S, d), BATCH, None, None)
+    logits = xg.astype(jnp.float32) @ params["router"]          # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, eidx = jax.lax.top_k(logits, k)                       # (G, S, k)
+    gates = jax.nn.softmax(vals, axis=-1)
+
+    # aux loss (Switch-style) before dropping
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.float32)         # (G, S, k, E)
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    # per-group (token, slot) pairs; slot-major order so slot-0 (largest
+    # gate) routes win capacity — same drop policy as moe_grouped
+    e_flat = eidx.transpose(0, 2, 1).reshape(G, k * S)          # (G, kS)
+    t_flat = jnp.tile(jnp.arange(S), k)[None].repeat(G, 0)
+    g_flat = gates.transpose(0, 2, 1).reshape(G, k * S)
+    order = jnp.argsort(e_flat, axis=1, stable=True)
+    e_s = jnp.take_along_axis(e_flat, order, axis=1)
+    t_s = jnp.take_along_axis(t_flat, order, axis=1)
+    g_s = jnp.take_along_axis(g_flat, order, axis=1)
+    # position within each expert's run (per group)
+    counts = jnp.sum(jax.nn.one_hot(e_s, E, dtype=jnp.int32), axis=1)
+    starts = jnp.cumsum(counts, axis=1) - counts                # (G, E)
+    pos = jnp.arange(k * S)[None] - jnp.take_along_axis(starts, e_s, axis=1)
+    keep = pos < C
+    slot = e_s * C + jnp.where(keep, pos, 0)                    # (G, kS)
+
+    # group-local dispatch: (G, E·C, d) buffer — no cross-group indices.
+    # All payload tensors stay bf16 (dispatch/combine in f32 doubles the
+    # collective bytes of the EP resharding — §Perf cell B iteration 4);
+    # gates/aux keep f32.
+    contrib = jnp.where(keep[..., None],
+                        jnp.take_along_axis(
+                            xg, t_s[..., None], axis=1), 0)     # (G, kS, d)
+    contrib = constrain(contrib, BATCH, None, None)
+    buf = jnp.zeros((G, E * C, d), xg.dtype)
+    gidx = jnp.arange(G)[:, None].repeat(k * S, 1)
+    buf = buf.at[gidx, slot].add(contrib)
+    buf = constrain(buf, BATCH, None, None)
+
+    # EP compute layout (constrained IN-LOOP — input shardings don't steer
+    # GSPMD inside the layer scan, measured §Perf cell B): weights gather
+    # to (e:model, ·, ·) per layer (FSDP), the hidden dual-shards
+    # (g:data × e:model) so both expert einsums are collective-free; the
+    # only activation collective left is the combine's e-gather.
+    from repro.distributed.annotate import MODEL
+    ep = MODEL if cfg.moe_sharding == "ep" else None
+    w_in = constrain(params["w_in"], ep, None, None)
+    w_gate = constrain(params["w_gate"], ep, None, None)
+    w_out = constrain(params["w_out"], ep, None, None)
+    xe = buf.reshape(G, E, C, d).astype(w_in.dtype)
+    xe = constrain(xe, BATCH, None, None, None)
+    h_in = jnp.einsum("gecd,edf->gecf", xe, w_in)
+    h_gate = jnp.einsum("gecd,edf->gecf", xe, w_gate)
+    h_in = constrain(h_in, BATCH, ep, None, None)
+    h_gate = constrain(h_gate, BATCH, ep, None, None)
+    h = jax.nn.silu(h_gate.astype(jnp.float32)).astype(h_in.dtype) * h_in
+    y_e = jnp.einsum("gecf,efd->gecd", h, w_out)                # (G, E, C, d)
+    y_e = constrain(y_e, BATCH, None, None, None)
+
+    # group-local combine — payloads bf16, gate weighting in the payload
+    # dtype (accumulation error vs the f32 path is bf16-noise; tested
+    # against the dense dispatch)
+    y_buf = constrain(y_e.reshape(G, E * C, d), BATCH, None, None)
+    routed = jnp.take_along_axis(y_buf, slot[..., None], axis=1)
+    routed = jnp.where(keep[..., None],
+                       routed * g_s[..., None].astype(y_buf.dtype), 0)
+    routed = constrain(routed, BATCH, None, None)
+    y = jnp.zeros((G, S, d), y_buf.dtype)
+    y = y.at[gidx, t_s].add(routed)
+    y = y.astype(x.dtype).reshape(B, Lq, d)
+
+    if cfg.n_shared_experts:
+        y = y + L.mlp(params["shared"], x, gated=cfg.mlp_gated,
+                      sparsity=sparsity)
+    return y, aux
+
+
+def moe_sparse_expert(params: Params, cfg: ModelConfig, x: Array,
+                      sparsity: SparsityConfig) -> Tuple[Array, Array]:
+    """Variant whose expert weights are *packed* sparse formats.
+
+    ``params["w_in"/"w_gate"/"w_out"]`` are pack pytrees with a leading E
+    axis; each expert matmul dispatches through the sparse kernels via a
+    vmap over experts.  Used by the sparse-MoE configs (paper technique on
+    expert FFNs).
+    """
+    B, Lq, d = x.shape
+    T = B * Lq
+    xt = x.reshape(T, d)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    combine, dispatch = route_topk(logits, cfg.top_k)
+    probs = jax.nn.softmax(logits, axis=-1)
+    aux = cfg.n_experts * jnp.sum(
+        jnp.mean(dispatch.astype(jnp.float32), 0) * jnp.mean(probs, 0))
+
+    def one_expert(w_in, w_gate, w_out):
+        h = apply_linear(xt, w_in, sparsity)
+        g = apply_linear(xt, w_gate, sparsity)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+        return apply_linear(h, w_out, sparsity)               # (T, d)
+
+    y_e = jax.vmap(one_expert)(params["w_in"], params["w_gate"],
+                               params["w_out"])                # (E, T, d)
+    y = jnp.einsum("etd,te->td", y_e.astype(jnp.float32),
+                   combine).astype(x.dtype)
+    if cfg.n_shared_experts:
+        y = y + L.mlp(params["shared"], xt, gated=cfg.mlp_gated,
+                      sparsity=sparsity)
+    return y.reshape(B, Lq, d), aux

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, adamw_init, adamw_update, apply_mask)
+from repro.optim.schedules import (  # noqa: F401
+    constant, cosine_warmup, linear_warmup)
+from repro.optim.compression import (  # noqa: F401
+    compress_int8, decompress_int8, compressed_psum)

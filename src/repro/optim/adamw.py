@@ -1,0 +1,100 @@
+"""AdamW with mask-aware updates (pruned weights stay pruned).
+
+Pure-pytree implementation (no optax): state = {"mu", "nu", "step"}, both
+moments sharded exactly like the parameters (ZeRO-3: `opt_state_specs`
+mirrors `param_specs`), so optimizer memory scales 1/|data| per chip.
+
+Mask semantics (the paper's co-design loop, Fig. 2): after pruning, the
+trainer passes the 0/1 ``masks`` pytree; gradients AND updates are masked
+so zeros never regrow during fine-tuning — the packed formats' structure
+stays valid for the whole run.  ``masks=None`` or a missing leaf means
+dense.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4                       # peak LR if a schedule is used
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0                 # global-norm clip; 0 disables
+    schedule: Optional[Callable[[Array], Array]] = None   # step → lr scale
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return {"mu": zeros,
+            "nu": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def apply_mask(tree: Any, masks: Optional[Any]) -> Any:
+    """Elementwise-multiply leaves by their mask where one exists."""
+    if masks is None:
+        return tree
+    return jax.tree.map(
+        lambda t, m: t if m is None else t * m.astype(t.dtype),
+        tree, masks, is_leaf=lambda x: x is None)
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any, state: dict,
+                 masks: Optional[Any] = None) -> Tuple[Any, dict, dict]:
+    """One optimizer step → (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    grads = apply_mask(grads, masks)
+
+    gnorm = global_norm(grads)
+    if cfg.grad_clip:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.schedule is not None:
+        lr = lr * cfg.schedule(step)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * jnp.square(g32)
+        mhat = mu / c1
+        nhat = nu / c2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if p.ndim >= 2:                          # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    new = [upd(p, g, mu, nu)
+           for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = treedef.unflatten([n[0] for n in new])
+    new_params = apply_mask(new_params, masks)
+    new_state = {"mu": treedef.unflatten([n[1] for n in new]),
+                 "nu": treedef.unflatten([n[2] for n in new]),
+                 "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,30 @@
+"""LR schedules as step → scale functions (multiply the peak LR)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def linear_warmup(warmup_steps: int):
+    return lambda step: jnp.minimum(
+        step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+
+
+def cosine_warmup(warmup_steps: int, total_steps: int,
+                  final_scale: float = 0.1):
+    """Linear warmup then cosine decay to ``final_scale``."""
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        frac = jnp.clip((s - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_scale + (1 - final_scale) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return fn

@@ -1,0 +1,3 @@
+from repro.serving.engine import (  # noqa: F401
+    Request, ServeConfig, Server, build_decode_step, build_prefill_step,
+    sample_token)

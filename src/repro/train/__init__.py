@@ -1,0 +1,2 @@
+from repro.train.trainer import (  # noqa: F401
+    TrainConfig, Trainer, build_train_step)

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests must see the real single CPU device (the 512-device override is
+# dryrun.py-private); keep any user XLA_FLAGS out of the picture.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

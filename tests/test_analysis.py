@@ -1,0 +1,171 @@
+"""Roofline analysis utilities: jaxpr FLOPs and HLO collective parsing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.analysis import (_parse_def, _split_computations,
+                                   _trip_count, hlo_collective_bytes,
+                                   jaxpr_flops, step_flops)
+
+
+class TestJaxprFlops:
+    def test_plain_matmul(self):
+        f = lambda a, b: a @ b
+        a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+        b = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+        assert step_flops(f, a, b) == 2 * 8 * 16 * 32
+
+    def test_batched_einsum(self):
+        f = lambda a, b: jnp.einsum("bij,bjk->bik", a, b)
+        a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+        b = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+        assert step_flops(f, a, b) == 2 * 4 * 8 * 16 * 32
+
+    def test_scan_multiplies(self):
+        def f(x, w):
+            def body(c, _):
+                return c @ w, None
+            out, _ = jax.lax.scan(body, x, None, length=7)
+            return out
+        x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+        w = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+        assert step_flops(f, x, w) == 7 * 2 * 8 * 8 * 8
+
+    def test_nested_scan(self):
+        def f(x, w):
+            def outer(c, _):
+                def inner(c2, _):
+                    return c2 @ w, None
+                c2, _ = jax.lax.scan(inner, c, None, length=3)
+                return c2, None
+            out, _ = jax.lax.scan(outer, x, None, length=5)
+            return out
+        x = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        w = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        assert step_flops(f, x, w) == 15 * 2 * 4 * 4 * 4
+
+    def test_grad_counts_backward(self):
+        f = lambda a, b: jnp.sum(a @ b)
+        g = jax.grad(f)
+        a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+        b = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+        fwd = step_flops(f, a, b)
+        # grad-of-matmul ≈ one more matmul of the same size (dA = dY Bᵀ)
+        assert step_flops(g, a, b) >= fwd
+
+    def test_remat_counted(self):
+        def f(x, w):
+            def body(x):
+                return jnp.tanh(x @ w)
+            return jnp.sum(jax.checkpoint(body)(x))
+        x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+        w = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+        base = 2 * 8 * 8 * 8
+        g = jax.grad(f)
+        assert step_flops(g, x, w) >= 2 * base   # fwd + recompute + bwd
+
+    def test_conv_flops(self):
+        f = lambda x, w: jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.ShapeDtypeStruct((1, 8, 8, 3), jnp.float32)
+        w = jax.ShapeDtypeStruct((3, 3, 3, 16), jnp.float32)
+        got = step_flops(f, x, w)
+        assert got == 2 * (1 * 8 * 8 * 16) * (3 * 3) * 3
+
+
+SAMPLE_HLO = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%region_body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %gte = s32[] get-tuple-element(%p), index=0
+  %data = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%data), replica_groups={}, to_apply=%add
+  %c1 = s32[] constant(1)
+  %next = s32[] add(%gte, %c1)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%next, %ar)
+}
+
+%region_cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p2), index=0
+  %limit = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %limit), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %ag = f32[16,8]{1,0} all-gather(%a), dimensions={0}
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]{1,0}) tuple(%zero, %a)
+  %w = (s32[], f32[8,8]{1,0}) while(%init), condition=%region_cond, body=%region_body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestHloParsing:
+    def test_parse_def_tuple_type(self):
+        name, ty, op, _ = _parse_def(
+            "  %w = (s32[], f32[8,8]{1,0}) while(%init), body=%b")
+        assert name == "w" and op == "while"
+        assert ty == "(s32[], f32[8,8]{1,0})"
+
+    def test_split_computations(self):
+        comps = _split_computations(SAMPLE_HLO)
+        assert set(comps) == {"region_body", "region_cond", "main"}
+
+    def test_trip_count(self):
+        comps = _split_computations(SAMPLE_HLO)
+        assert _trip_count(comps["region_cond"]) == 12
+
+    def test_collective_bytes_with_trips(self):
+        out = hlo_collective_bytes(SAMPLE_HLO)
+        # all-gather operand: 8·8·4 = 256B once; all-reduce 256B × 12 trips
+        assert out["bytes_by_kind"]["all-gather"] == 256
+        assert out["bytes_by_kind"]["all-reduce"] == 256 * 12
+
+    def test_dryrun_results_sane(self):
+        """If the matrix has run, every record satisfies basic invariants."""
+        import glob
+        import json
+        recs = []
+        for p in glob.glob("results/dryrun*/*/*.json"):
+            with open(p) as f:
+                r = json.load(f)
+            if r.get("ok"):
+                recs.append(r)
+        if not recs:
+            pytest.skip("dry-run matrix not yet produced")
+        for r in recs:
+            assert r["flops_global"] > 0
+            assert 0 < r["roofline"]["useful_flop_ratio"] <= 1.5, \
+                (r["arch"], r["cell"])
+            assert r["memory"]["total_per_device"] > 0
+
+    def test_dryrun_full_coverage(self):
+        """The optimized matrix covers every runnable (arch × cell × mesh)."""
+        import glob
+        import json
+        import os
+        from repro import configs as C
+        paths = glob.glob("results/dryrun_opt/*/*.json")
+        if not paths:
+            pytest.skip("optimized matrix not yet produced")
+        seen = set()
+        for p in paths:
+            with open(p) as f:
+                r = json.load(f)
+            assert r.get("ok"), (p, r.get("error", "")[:200])
+            mesh = os.path.basename(os.path.dirname(p))
+            seen.add((r["arch"], r["cell"], mesh))
+        want = set()
+        for arch in C.list_archs():
+            cfg = C.get(arch)
+            for cell in C.cells_for(cfg):
+                want.add((cfg.name, cell.name, "singlepod"))
+                want.add((cfg.name, cell.name, "multipod"))
+        assert want <= seen, want - seen

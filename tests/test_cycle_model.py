@@ -1,0 +1,137 @@
+"""Cycle-accurate CFU simulator vs the paper's closed forms (Figs 8–10)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytical, cycle_model, pruning
+from repro.core.cycle_model import Design
+
+
+def iid_mask(seed, n, x):
+    return np.random.default_rng(seed).random(n) >= x
+
+
+class TestClosedForms:
+    def test_ussa_cycles_linear(self):
+        # c_a = 4(1-x) by linearity
+        for x in (0.0, 0.25, 0.5, 0.9):
+            assert analytical.ussa_cycles_analytical(x) == \
+                pytest.approx(4 * (1 - x))
+
+    def test_ussa_observed_adds_allzero_cycle(self):
+        for x in (0.1, 0.5, 0.9):
+            assert analytical.ussa_cycles_observed(x) == \
+                pytest.approx(4 * (1 - x) + x ** 4)
+
+    def test_fig8_bands(self):
+        """USSA speedup reaches the paper's 2–3× band over x∈[0.5, 0.75]."""
+        assert analytical.ussa_speedup_observed(0.5) > 1.9
+        assert 2.0 <= analytical.ussa_speedup_observed(0.55)
+        assert analytical.ussa_speedup_observed(0.75) <= 3.3
+
+    def test_sssa_analytical(self):
+        assert analytical.sssa_speedup_analytical(0.5) == pytest.approx(2.0)
+        assert analytical.sssa_speedup_analytical(0.75) == pytest.approx(4.0)
+
+
+class TestSimulatorMatchesAnalytical:
+    @given(st.integers(0, 2**31), st.floats(0.05, 0.9))
+    @settings(max_examples=15, deadline=None)
+    def test_ussa_on_iid(self, seed, x):
+        mask = iid_mask(seed, 40_000, x)
+        cycles = cycle_model.stream_cycles(mask, Design.USSA,
+                                           include_loop_overhead=False)
+        expect = analytical.ussa_cycles_observed(x) * (len(mask) // 4)
+        assert cycles == pytest.approx(expect, rel=0.08)
+
+    def test_baselines(self):
+        mask = iid_mask(0, 4000, 0.5)
+        assert cycle_model.stream_cycles(
+            mask, Design.BASELINE_SEQ, include_loop_overhead=False) == 4000
+        assert cycle_model.stream_cycles(
+            mask, Design.BASELINE_SIMD, include_loop_overhead=False) == 1000
+
+    def test_sssa_skips_whole_runs(self):
+        # stream of 16 blocks, first non-zero, rest zero → 1 visited block
+        mask = np.zeros(64, bool)
+        mask[:4] = True
+        c = cycle_model.stream_cycles(mask, Design.SSSA)
+        t = cycle_model.DEFAULT_TIMING
+        assert c == t.simd_mac + t.inc_indvar + t.branch
+
+    def test_sssa_cap_forces_landing(self):
+        # 20 zero blocks after block 0 with cap 15 → walker lands once
+        mask = np.zeros(4 * 22, bool)
+        mask[:4] = True
+        mask[-4:] = True
+        c15 = cycle_model.stream_cycles(mask, Design.SSSA, cap=15)
+        c4 = cycle_model.stream_cycles(mask, Design.SSSA, cap=4)
+        assert c4 > c15   # smaller cap → more landings
+
+
+class TestFig9Crossover:
+    def test_observed_exceeds_analytical_at_high_block_sparsity(self):
+        """Paper Section IV-E: observed speedup can exceed 1/(1-x) because
+        the walk eliminates loop iterations entirely."""
+        rng = np.random.default_rng(5)
+        w = rng.normal(size=(4096, 1)).astype(np.float32)
+        import jax.numpy as jnp
+        wp, mask = pruning.block_semi_structured(jnp.asarray(w), 0.75,
+                                                 block=4)
+        m = np.asarray(mask).astype(bool)[:, 0]
+        base = cycle_model.stream_cycles(m, Design.BASELINE_SIMD)
+        sssa = cycle_model.stream_cycles(m, Design.SSSA)
+        speedup = base / sssa
+        assert speedup > analytical.sssa_speedup_analytical(0.75)
+
+
+class TestLayerAndModel:
+    def test_conv_fast_matches_exact(self):
+        rng = np.random.default_rng(7)
+        mask = rng.random((3, 3, 8, 4)) > 0.5
+        for d in (Design.BASELINE_SIMD, Design.USSA, Design.SSSA,
+                  Design.CSA):
+            exact = cycle_model.conv_layer_cycles(mask, (2, 2), d)
+            fast = cycle_model.conv_layer_cycles_fast(mask, (2, 2), d)
+            assert exact == fast, d
+
+    def test_model_speedup_band(self):
+        """Fig. 10's 4–5× CSA band at moderate combined sparsity (vs the
+        sequential baseline, the paper's comparison for vcmac designs)."""
+        import jax.numpy as jnp
+        rng = np.random.default_rng(8)
+        layers = [cycle_model.LayerShape("conv", (3, 3, 64, 32), (8, 8)),
+                  cycle_model.LayerShape("linear", (128, 16))]
+        masks = []
+        for spec in layers:
+            if spec.kind == "conv":
+                h, w_, ci, co = spec.shape
+                wt = jnp.asarray(rng.normal(size=(h * w_ * ci, co)),
+                                 jnp.float32)
+            else:
+                wt = jnp.asarray(rng.normal(size=spec.shape), jnp.float32)
+            _, mask = pruning.combined(wt, x_ss=0.5, x_us=0.6)
+            masks.append(np.asarray(mask).reshape(
+                spec.shape if spec.kind == "conv" else spec.shape))
+        s = cycle_model.model_speedup(layers, masks, Design.CSA)
+        assert 3.0 < s < 8.0, s
+
+    def test_design_ordering(self):
+        """CSA beats USSA vs their shared sequential baseline (block skip
+        composes on top of the variable-cycle MAC); SSSA > 1 vs SIMD."""
+        import jax.numpy as jnp
+        rng = np.random.default_rng(9)
+        w = jnp.asarray(rng.normal(size=(1024, 4)), jnp.float32)
+        _, mask = pruning.combined(w, x_ss=0.5, x_us=0.5)
+        m = np.asarray(mask).astype(bool)
+        layers = [cycle_model.LayerShape("linear", (1024, 4))]
+        cyc = {d: cycle_model.model_cycles(layers, [m], d)
+               for d in (Design.USSA, Design.SSSA, Design.CSA)}
+        # CSA = USSA's vcmac + SSSA's block skip: strictly fewer cycles
+        assert cyc[Design.CSA] <= cyc[Design.USSA]
+        s_csa = cycle_model.model_speedup(layers, [m], Design.CSA)
+        s_ussa = cycle_model.model_speedup(layers, [m], Design.USSA)
+        s_sssa = cycle_model.model_speedup(layers, [m], Design.SSSA)
+        assert s_csa >= s_ussa
+        assert s_sssa > 1.0

@@ -1,0 +1,163 @@
+"""Paper Algorithms 1 + 2: lookahead LSB encoding (faithful layer)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding, pruning
+from repro.core.encoding import BLOCK, SKIP_CAP
+
+
+def rand_int7(rng, shape):
+    return rng.integers(encoding.INT7_MIN, encoding.INT7_MAX + 1,
+                        size=shape).astype(np.int8)
+
+
+class TestClampQuantize:
+    def test_clamp_range(self):
+        w = jnp.arange(-128, 128, dtype=jnp.int32).astype(jnp.int8)
+        c = encoding.clamp_int7(w)
+        assert int(c.min()) >= -64 and int(c.max()) <= 63
+
+    def test_quantize_int7_zero_preserving(self):
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=(32, 8)).astype(np.float32)
+        w[::2] = 0.0
+        q, scale = encoding.quantize_int7(jnp.asarray(w), axis=0)
+        assert np.all(np.asarray(q)[::2] == 0)
+        assert int(jnp.max(jnp.abs(q))) <= 63
+
+    def test_quantize_roundtrip_accuracy(self):
+        rng = np.random.default_rng(1)
+        w = rng.normal(size=(64, 4)).astype(np.float32)
+        q, scale = encoding.quantize_int7(jnp.asarray(w), axis=0)
+        err = np.abs(np.asarray(q, np.float32) * np.asarray(scale) - w)
+        assert err.max() < np.abs(w).max() / 63
+
+
+class TestSkipCounts:
+    def test_manual_example(self):
+        # blocks: [nz, z, z, nz, z, nz] → skips [2, 1, 0, 1, 0, 0]
+        zb = jnp.asarray([[False, True, True, False, True, False]])
+        out = encoding.skip_counts(zb)
+        assert list(np.asarray(out)[0]) == [2, 1, 0, 1, 0, 0]
+
+    def test_cap(self):
+        zb = jnp.asarray([[False] + [True] * 20])
+        out = encoding.skip_counts(zb, cap=15)
+        assert int(out[0, 0]) == 15
+
+    def test_paper_typo_cap4(self):
+        # Algorithm 1's pseudo-code bound (skip_blocks < 4): exposed as a
+        # parameter; counts then cap at 4
+        zb = jnp.asarray([[False] + [True] * 10])
+        out = encoding.skip_counts(zb, cap=4)
+        assert int(out[0, 0]) == 4
+
+    @given(st.lists(st.booleans(), min_size=1, max_size=64))
+    @settings(max_examples=30, deadline=None)
+    def test_matches_naive(self, zeros):
+        zb = np.asarray(zeros, bool)
+        got = np.asarray(encoding.skip_counts(jnp.asarray(zb[None])))[0]
+        for b in range(len(zb)):
+            run = 0
+            for j in range(b + 1, len(zb)):
+                if zb[j] and run < SKIP_CAP:
+                    run += 1
+                else:
+                    break
+            assert got[b] == run
+
+
+class TestEncodeDecode:
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_roundtrip_exact(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rand_int7(rng, (64,))
+        w[rng.random(64) < 0.5] = 0
+        enc = encoding.encode_stream(jnp.asarray(w))
+        vals, skips = encoding.decode_stream(enc)
+        np.testing.assert_array_equal(np.asarray(vals), w)
+
+    def test_skip_bits_embedded(self):
+        w = np.zeros(16, np.int8)
+        w[:4] = [1, 2, 3, 4]          # one non-zero block, 3 zero blocks
+        enc = encoding.encode_stream(jnp.asarray(w))
+        _, skips = encoding.decode_stream(enc)
+        assert int(skips[0]) == 3
+
+    def test_byte_layout(self):
+        # [sign, b5..b0, skip]: -1 (0b11111111) with skip bit 1 → 0xFF
+        w = jnp.asarray([-1, -1, -1, -1], jnp.int8)
+        skips = jnp.asarray([0b1111], jnp.uint8)
+        enc = encoding.encode_block_bits(w.reshape(1, 4), skips)
+        assert np.asarray(enc).tolist() == [[-1, -1, -1, -1]]
+        vals = encoding.decode_values(enc)
+        assert np.asarray(vals).tolist() == [[-1, -1, -1, -1]]
+
+    def test_matrix_roundtrip(self):
+        rng = np.random.default_rng(3)
+        w = rand_int7(rng, (64, 8))
+        wq, _ = pruning.block_semi_structured(
+            jnp.asarray(w, jnp.float32), 0.5, block=4)
+        wq = np.asarray(wq, np.int8)
+        enc = encoding.encode_weight_matrix(jnp.asarray(wq))
+        vals, _ = encoding.decode_weight_matrix(enc)
+        np.testing.assert_array_equal(np.asarray(vals), wq)
+
+
+class TestWalk:
+    """Listing 2 semantics: the sssa_inc_indvar walk."""
+
+    @given(st.integers(0, 2**32 - 1), st.floats(0.0, 0.95))
+    @settings(max_examples=30, deadline=None)
+    def test_walk_visits_every_nonzero_block(self, seed, sparsity):
+        rng = np.random.default_rng(seed)
+        w = rand_int7(rng, (128,))
+        w[rng.random(128) < sparsity] = 0
+        enc = np.asarray(encoding.encode_stream(jnp.asarray(w)))
+        visited = encoding.simulate_walk(enc)
+        nz_blocks = {b for b in range(32) if w[4 * b:4 * b + 4].any()}
+        assert nz_blocks <= set(visited)
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_walk_skips_zero_blocks_within_cap(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rand_int7(rng, (64,))
+        w[rng.random(64) < 0.7] = 0
+        enc = np.asarray(encoding.encode_stream(jnp.asarray(w)))
+        visited = encoding.simulate_walk(enc)
+        # a visited zero block is only allowed when it terminates a
+        # cap-long run or is block 0
+        for b in visited:
+            blk = w[4 * b:4 * b + 4]
+            if not blk.any() and b > 0:
+                # must be ≥ cap blocks after the previous visited nz block
+                prev = max(v for v in visited if v < b)
+                assert b - prev >= 1   # walk made progress
+        # walk result == MAC correctness: sum over visited blocks equals
+        # full dot product (zero blocks contribute zero)
+        x = rng.normal(size=64).astype(np.float32)
+        vals = np.asarray(encoding.decode_values(jnp.asarray(enc)))
+        full = (vals.astype(np.float32) * x).sum()
+        walked = sum(
+            (vals[4 * b:4 * b + 4].astype(np.float32)
+             * x[4 * b:4 * b + 4]).sum() for b in visited)
+        np.testing.assert_allclose(walked, full, rtol=1e-5)
+
+
+class TestTileLevel:
+    def test_tile_zero_map(self):
+        w = jnp.zeros((8, 8))
+        w = w.at[0:4, 0:4].set(1.0)
+        zmap = encoding.tile_zero_map(w, 4, 4)
+        assert np.asarray(zmap).tolist() == [[False, True], [True, True]]
+
+    def test_tile_skip_counts(self):
+        w = jnp.zeros((16, 4))
+        w = w.at[0:4].set(1.0)        # first K-tile non-zero, 3 zero
+        out = encoding.tile_skip_counts(w, 4, 4)
+        assert np.asarray(out)[0].tolist() == [3, 2, 1, 0]

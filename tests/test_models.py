@@ -1,0 +1,181 @@
+"""Per-architecture smoke tests (deliverable f) + model semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro import models as MZ
+from repro.data import batch_for
+from repro.models import layers as L
+from repro.models import transformer as TR
+from repro.models.config import LayerKind, ModelConfig
+
+
+@pytest.mark.parametrize("arch", C.list_archs())
+def test_arch_smoke(arch):
+    """Reduced config: one forward/train step, shape + finiteness."""
+    cfg = C.get_reduced(arch)
+    rng = jax.random.key(0)
+    params = MZ.init_model(rng, cfg)
+    batch = batch_for(cfg, batch=2, seq=16)
+    loss = MZ.model_loss(params, cfg, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    grads = jax.grad(lambda p: MZ.model_loss(p, cfg, batch))(params)
+    assert all(bool(jnp.all(jnp.isfinite(g)))
+               for g in jax.tree.leaves(grads)), arch
+
+
+@pytest.mark.parametrize("arch", C.list_archs())
+def test_arch_full_config_geometry(arch):
+    """The full configs carry the exact assigned dimensions."""
+    cfg = C.get(arch)
+    expect = {
+        "qwen2-moe-a2.7b": (24, 2048, 151936),
+        "dbrx-132b": (40, 6144, 100352),
+        "qwen3-0.6b": (28, 1024, 151936),
+        "gemma3-1b": (26, 1152, 262144),
+        "stablelm-12b": (40, 5120, 100352),
+        "gemma2-27b": (46, 4608, 256000),
+        "seamless-m4t-large-v2": (24, 1024, 256206),
+        "zamba2-1.2b": (38, 2048, 32000),
+        "mamba2-130m": (24, 768, 50280),
+        "qwen2-vl-72b": (80, 8192, 152064),
+    }[cfg.name]
+    assert (cfg.n_layers, cfg.d_model, cfg.vocab_size) == expect
+
+
+def test_param_counts_plausible():
+    """Sanity: parameter counts in the ballpark their names claim."""
+    bounds = {"dbrx-132b": (110e9, 150e9),
+              "qwen2-vl-72b": (60e9, 80e9),
+              "stablelm-12b": (10e9, 14e9),
+              "gemma2-27b": (22e9, 32e9),
+              "mamba2-130m": (0.1e9, 0.2e9),
+              "qwen2-moe-a2.7b": (12e9, 16e9)}   # total (A2.7B = active)
+    for arch, (lo, hi) in bounds.items():
+        n = C.get(arch).param_count()
+        assert lo < n < hi, (arch, n)
+    active = C.get("qwen2-moe-a2.7b").active_param_count()
+    assert 2e9 < active < 5e9    # the "A2.7B"
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-27b",
+                                  "zamba2-1.2b", "mamba2-130m",
+                                  "seamless-m4t-large-v2"])
+def test_prefill_decode_matches_full_forward(arch):
+    """Greedy decode path == teacher-forcing forward (same logits)."""
+    cfg = C.get_reduced(arch)
+    rng = jax.random.key(1)
+    params = MZ.init_model(rng, cfg)
+    B, L_total = 2, 12
+    batch = batch_for(cfg, batch=B, seq=L_total)
+    full = MZ.model_logits(params, cfg, batch)      # (B, L, V)
+
+    prompt_len = 8
+    cache = MZ.init_cache(cfg, B, L_total,
+                          src_len=batch["src"].shape[1]
+                          if "src" in batch else None, dtype=jnp.float32)
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :prompt_len]
+    logits_p, cache = MZ.prefill(params, cfg, pre_batch, cache)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(full[:, prompt_len - 1]),
+                               rtol=2e-2, atol=2e-2)
+    pos = prompt_len
+    for t in range(prompt_len, L_total):
+        logits_d, cache = MZ.decode_step(params, cfg, batch["tokens"][:, t],
+                                         cache, jnp.asarray(pos))
+        pos += 1
+        np.testing.assert_allclose(np.asarray(logits_d),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_gqa_mqa_shapes():
+    for kv in (1, 2, 4):
+        cfg = ModelConfig(name="t", n_layers=1, d_model=32, vocab_size=128,
+                          n_heads=4, n_kv_heads=kv, d_ff=64, remat=False)
+        p = MZ.init_model(jax.random.key(0), cfg)
+        logits, _, _ = TR.lm_apply(p, cfg, jnp.zeros((1, 8), jnp.int32))
+        assert logits.shape == (1, 8, cfg.vocab_padded)
+
+
+def test_local_global_mask_difference():
+    """Window layers must attend differently from global layers."""
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, vocab_size=128,
+                      n_heads=2, n_kv_heads=2, d_ff=64, window_size=4,
+                      layer_kinds=(int(LayerKind.ATTN_LOCAL),),
+                      remat=False)
+    cfg_g = ModelConfig(name="t", n_layers=1, d_model=32, vocab_size=128,
+                        n_heads=2, n_kv_heads=2, d_ff=64, window_size=4,
+                        layer_kinds=(int(LayerKind.ATTN_GLOBAL),),
+                        remat=False)
+    p = MZ.init_model(jax.random.key(2), cfg)
+    toks = jax.random.randint(jax.random.key(3), (1, 32), 0, 127)
+    out_local = TR.lm_apply(p, cfg, toks)[0]
+    out_global = TR.lm_apply(p, cfg_g, toks)[0]
+    # positions beyond the window see different context
+    assert not np.allclose(np.asarray(out_local[:, -1]),
+                           np.asarray(out_global[:, -1]))
+
+
+def test_mrope_reduces_to_rope_on_equal_triples():
+    x = jax.random.normal(jax.random.key(4), (2, 8, 4, 32))
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    std = L.apply_rope(x, pos, 10_000.0)
+    tri = jnp.broadcast_to(pos[..., None], (2, 8, 3))
+    mr = L.apply_rope(x, tri, 10_000.0, mrope_sections=(4, 6, 6))
+    np.testing.assert_allclose(np.asarray(std), np.asarray(mr), rtol=1e-6)
+
+
+def test_softcap_bounds_logits():
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, vocab_size=128,
+                      n_heads=2, n_kv_heads=2, d_ff=64,
+                      final_softcap=5.0, remat=False)
+    p = MZ.init_model(jax.random.key(5), cfg)
+    logits, _, _ = TR.lm_apply(p, cfg, jnp.zeros((1, 8), jnp.int32))
+    assert float(jnp.max(jnp.abs(logits))) <= 5.0 + 1e-4
+
+
+def test_ssd_chunked_equals_recurrence():
+    """Mamba2 SSD chunked scan == naive per-step recurrence."""
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(6)
+    b, l, h, p, n = 2, 16, 3, 4, 8
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, l, h)) * 0.5 + 0.1, jnp.float32)
+    A = -jnp.asarray(rng.random(h) + 0.5, jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, l, h, n)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b, l, h, n)), jnp.float32)
+    y_chunk, final = ssd_chunked(x, dt, A, B, Cm, chunk=4)
+
+    # naive recurrence: s_t = exp(dt·A) s_{t-1} + dt·x_t B_t ; y = C s
+    s = np.zeros((b, h, p, n), np.float32)
+    ys = []
+    for t in range(l):
+        dA = np.exp(np.asarray(dt[:, t]) * np.asarray(A)[None])
+        xd = np.asarray(x[:, t]) * np.asarray(dt[:, t])[..., None]
+        s = s * dA[..., None, None] + np.einsum(
+            "bhp,bhn->bhpn", xd, np.asarray(B[:, t]))
+        ys.append(np.einsum("bhn,bhpn->bhp", np.asarray(Cm[:, t]), s))
+    y_naive = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_naive, rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), s, rtol=2e-4, atol=2e-4)
+
+
+def test_cnn_zoo_forward():
+    from repro.models import cnn
+    shapes = {"vgg16": (32, 32, 3), "resnet56": (32, 32, 3),
+              "mobilenetv2": (96, 96, 3), "dscnn": (49, 10, 1)}
+    for name, (init, apply) in cnn.CNN_ZOO.items():
+        p = init(jax.random.key(6), width=0.25)
+        x = jax.random.normal(jax.random.key(7), (2, *shapes[name]))
+        y = apply(p, x)
+        assert y.ndim == 2 and bool(jnp.all(jnp.isfinite(y))), name
+        specs = cnn.layer_shapes(name)
+        assert all(s.shape[-2] % 4 == 0 for s in specs
+                   if s.kind == "conv"), name   # CFU block alignment

@@ -1,0 +1,107 @@
+"""Pruning structures (paper Fig. 1) and mask invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pruning
+
+
+def rand_w(seed, shape=(64, 16)):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape), jnp.float32)
+
+
+class TestUnstructured:
+    @given(st.integers(0, 1000), st.floats(0.0, 0.95))
+    @settings(max_examples=25, deadline=None)
+    def test_sparsity_level(self, seed, s):
+        w = rand_w(seed)
+        wp, mask = pruning.unstructured(w, s)
+        got = pruning.sparsity_of(mask)
+        assert abs(got - s) < 0.05 or got <= s  # ties keep extra entries
+        assert bool(jnp.all((wp == 0) | (mask == 1)))
+
+    def test_keeps_largest(self):
+        w = jnp.asarray([[1.0, -5.0, 0.1, 3.0]])
+        wp, mask = pruning.unstructured(w, 0.5)
+        assert np.asarray(mask).tolist() == [[0.0, 1.0, 0.0, 1.0]]
+
+
+class TestBlock:
+    def test_whole_blocks_zeroed(self):
+        w = rand_w(1, (64, 8))
+        wp, mask = pruning.block_semi_structured(w, 0.5, block=4)
+        m = np.asarray(mask).reshape(16, 4, 8)
+        per_block = m.sum(axis=1)
+        assert set(np.unique(per_block)) <= {0.0, 4.0}
+
+    @given(st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_structure_matches_walk_contract(self, seed):
+        # block-pruned weights must produce streams where every zero is
+        # part of an all-zero block (what SSSA skips)
+        w = rand_w(seed, (32, 4))
+        wp, _ = pruning.block_semi_structured(w, 0.5, block=4)
+        cols = np.asarray(wp).T.reshape(4, 8, 4)
+        for col in cols:
+            for blk in col:
+                assert blk.all() or not blk.any()
+
+
+class TestNM:
+    @given(st.sampled_from([(1, 4), (2, 4), (4, 8)]), st.integers(0, 50))
+    @settings(max_examples=15, deadline=None)
+    def test_exact_nm(self, nm, seed):
+        n, m = nm
+        w = rand_w(seed, (64, 16))
+        wp, mask = pruning.n_m(w, n, m)
+        m_np = np.asarray(mask).reshape(64 // m, m, 16)
+        counts = m_np.sum(axis=1)
+        assert np.all(counts == n)
+        assert abs(pruning.sparsity_of(mask) - (1 - n / m)) < 1e-6
+
+    def test_group_shared_positions(self):
+        w = rand_w(7, (32, 8))
+        _, mask = pruning.n_m(w, 2, 4, group=4)
+        m = np.asarray(mask)
+        for g in range(2):
+            cols = m[:, g * 4:(g + 1) * 4]
+            assert np.all(cols == cols[:, :1])
+
+
+class TestCombined:
+    def test_total_sparsity(self):
+        w = rand_w(2, (128, 16))
+        wp, mask = pruning.combined(w, x_ss=0.5, x_us=0.5)
+        total = pruning.sparsity_of(mask)
+        assert abs(total - 0.75) < 0.05
+
+    def test_combined_nm_structure(self):
+        w = rand_w(3, (128, 16))
+        wp, mask = pruning.combined_nm(w, 0.5, 2, 4, block=8)
+        m = np.asarray(mask)
+        # inside surviving blocks: exact 2:4 or fully zero
+        groups = m.reshape(32, 4, 16).sum(axis=1)
+        assert set(np.unique(groups)) <= {0.0, 2.0}
+
+
+class TestSchedule:
+    def test_iterative_schedule(self):
+        sched = pruning.iterative_schedule(0.8, 5)
+        assert len(sched) == 5
+        assert all(b >= a for a, b in zip(sched, sched[1:]))
+        assert abs(sched[-1] - 0.8) < 1e-9
+
+    def test_dispatch(self):
+        w = rand_w(4)
+        for method, kw in [("unstructured", {"sparsity": 0.5}),
+                           ("block", {"sparsity": 0.5}),
+                           ("nm", {"n": 2, "m": 4}),
+                           ("combined", {"x_ss": 0.25, "x_us": 0.5}),
+                           ("combined_nm", {"x_ss": 0.25, "n": 2, "m": 4})]:
+            wp, mask = pruning.prune(w, method, **kw)
+            assert wp.shape == w.shape
+        with pytest.raises(ValueError):
+            pruning.prune(w, "nope")

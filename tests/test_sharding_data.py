@@ -1,0 +1,164 @@
+"""Sharding rules (against the production 16×16 / 2×16×16 AbstractMesh)
+and the data pipeline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro import configs as C
+from repro import models as MZ
+from repro.data import DataConfig, class_data, input_specs_for_batch, \
+    make_batch
+from repro.distributed import sharding as SH
+
+
+def abstract_mesh(multi=False):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+class TestBestEffort:
+    def test_drops_nondividing(self):
+        mesh = abstract_mesh()
+        spec = SH.best_effort(P("data", "model"), (33, 64), mesh)
+        assert spec == P(None, "model")
+
+    def test_keeps_valid(self):
+        mesh = abstract_mesh()
+        assert SH.best_effort(P("data", "model"), (32, 64), mesh) == \
+            P("data", "model")
+
+    def test_tuple_axes(self):
+        mesh = abstract_mesh(multi=True)
+        spec = SH.best_effort(P(("pod", "data"), None), (64, 8), mesh)
+        assert spec == P(("pod", "data"), None)
+        spec = SH.best_effort(P(("pod", "data"), None), (33, 8), mesh)
+        assert spec == P(None, None)
+
+
+@pytest.mark.parametrize("arch", C.list_archs())
+@pytest.mark.parametrize("multi", [False, True])
+def test_param_specs_valid_all_archs(arch, multi):
+    """Every assigned arch's param specs divide on the production mesh."""
+    cfg = C.get(arch)
+    mesh = abstract_mesh(multi)
+    abstract = jax.eval_shape(
+        lambda: MZ.init_model(jax.random.key(0), cfg))
+    specs = SH.param_specs(abstract, cfg, mesh)
+    assert SH.validate_specs(abstract, specs, mesh) == []
+
+
+@pytest.mark.parametrize("arch", ["qwen2-vl-72b", "dbrx-132b"])
+def test_big_models_fit_state_budget(arch):
+    """Params+optimizer per chip ≤ HBM at the production mesh (ZeRO-3)."""
+    cfg = C.get(arch)
+    mesh = abstract_mesh()
+    abstract = jax.eval_shape(
+        lambda: MZ.init_model(jax.random.key(0), cfg))
+    specs = SH.param_specs(abstract, cfg, mesh)
+    sizes = dict(mesh.shape)
+    per_device = 0
+    for leaf, spec in zip(jax.tree.leaves(abstract),
+                          jax.tree.leaves(
+                              specs, is_leaf=lambda x: isinstance(x, P))):
+        n = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        shards = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                shards *= sizes[a]
+        per_device += n // shards
+    # bf16 params per chip; ×5 for f32 mu+nu on top stays under 16 GB
+    assert per_device * 5 < 16 * 2**30, per_device
+
+
+def test_moe_ep_vs_tp_spec():
+    dbrx = C.get("dbrx-132b")          # 16 experts → EP
+    qwen = C.get("qwen2-moe-a2.7b")    # 60 experts → TP fallback
+    mesh = abstract_mesh()
+    for cfg, expect_model_on_expert in ((dbrx, True), (qwen, False)):
+        abstract = jax.eval_shape(
+            lambda cfg=cfg: MZ.init_model(jax.random.key(0), cfg))
+        specs = SH.param_specs(abstract, cfg, mesh)
+        leaf_spec = specs["layers"]["moe"]["w_in"]
+        # stacked (L, E, d, ff): EP puts "model" on E (axis 1)
+        assert (leaf_spec[1] == "model") == expect_model_on_expert
+
+
+class TestCacheSpecs:
+    def test_auto_mode_heads_when_divisible(self):
+        cfg = C.get("gemma2-27b")      # kv=16 divides model=16
+        mesh = abstract_mesh()
+        cache = jax.eval_shape(lambda: MZ.init_cache(cfg, 128, 1024))
+        specs = SH.cache_specs(cache, cfg, mesh, kv_mode="auto")
+        assert specs["k"][3] == "model"
+
+    def test_auto_mode_seq_fallback(self):
+        cfg = C.get("qwen2-vl-72b")    # kv=8 doesn't divide 16
+        mesh = abstract_mesh()
+        cache = jax.eval_shape(lambda: MZ.init_cache(cfg, 128, 1024))
+        specs = SH.cache_specs(cache, cfg, mesh, kv_mode="auto")
+        assert specs["k"][2] == "model"
+        assert SH.validate_specs(cache, specs, mesh) == []
+
+    def test_hybrid_cache_specs_valid(self):
+        cfg = C.get("zamba2-1.2b")
+        mesh = abstract_mesh()
+        cache = jax.eval_shape(lambda: MZ.init_cache(cfg, 128, 1024))
+        specs = SH.cache_specs(cache, cfg, mesh)
+        assert SH.validate_specs(cache, specs, mesh) == []
+
+
+class TestDataPipeline:
+    def test_deterministic(self):
+        cfg = C.get_reduced("qwen3-0.6b")
+        d = DataConfig(seed=1, global_batch=4, seq_len=16)
+        a = make_batch(cfg, d, 7)
+        b = make_batch(cfg, d, 7)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+        c = make_batch(cfg, d, 8)
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(c["tokens"]))
+
+    def test_host_sharding_disjoint(self):
+        cfg = C.get_reduced("qwen3-0.6b")
+        d0 = DataConfig(seed=1, global_batch=8, seq_len=16, host_id=0,
+                        n_hosts=2)
+        d1 = DataConfig(seed=1, global_batch=8, seq_len=16, host_id=1,
+                        n_hosts=2)
+        a = make_batch(cfg, d0, 0)
+        b = make_batch(cfg, d1, 0)
+        assert a["tokens"].shape == (4, 16)
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+    def test_labels_shift_tokens(self):
+        cfg = C.get_reduced("qwen3-0.6b")
+        b = make_batch(cfg, DataConfig(global_batch=2, seq_len=16), 0)
+        np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                      np.asarray(b["labels"][:, :-1]))
+
+    def test_input_specs_match_batches(self):
+        for arch in ("qwen3-0.6b", "seamless-m4t-large-v2",
+                     "qwen2-vl-72b"):
+            cfg = C.get_reduced(arch)
+            concrete = make_batch(cfg, DataConfig(global_batch=2,
+                                                  seq_len=16), 0)
+            specs = input_specs_for_batch(cfg, 2, 16)
+            assert set(specs) == set(concrete)
+            for k in specs:
+                assert specs[k].shape == concrete[k].shape, (arch, k)
+
+    def test_class_data_separable(self):
+        x, y = class_data(0, 256, (8, 8, 1), 4, separation=3.0)
+        mus = np.stack([x[y == c].mean(0) for c in range(4)])
+        # nearest-mean classification should beat chance by a lot
+        d = ((x[:, None] - mus[None]) ** 2).sum((2, 3, 4))
+        acc = (d.argmin(1) == y).mean()
+        assert acc > 0.9

@@ -1,0 +1,86 @@
+"""SparseLinear integration: the paper's technique as a framework
+feature — config-driven prune → pack → forward for every format."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pruning
+from repro.core.sparse_linear import (DENSE, SparsityConfig, apply_linear,
+                                      init_linear, prune_weight,
+                                      sparsify_weight)
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models import transformer as TR
+
+
+CFGS = {
+    "dense": DENSE,
+    "lookahead": SparsityConfig(format="lookahead", sparsity=0.5),
+    "block": SparsityConfig(format="block", sparsity=0.5, block_k=16,
+                            block_n=8),
+    "nm": SparsityConfig(format="nm", n=2, m=4, block_n=8),
+    "combined": SparsityConfig(format="combined", sparsity=0.5, n=2, m=4,
+                               block_k=16, block_n=8),
+}
+
+
+@pytest.mark.parametrize("fmt", list(CFGS))
+def test_forward_matches_masked_dense(fmt):
+    cfg = CFGS[fmt]
+    rng = jax.random.key(0)
+    w = init_linear(rng, 64, 32, jnp.float32)
+    pruned, mask = prune_weight(w, cfg)
+    packed = sparsify_weight(w, cfg)
+    x = jax.random.normal(jax.random.key(1), (4, 8, 64), jnp.float32)
+    out = apply_linear(x, packed, cfg)
+    assert out.shape == (4, 8, 32)
+    if fmt == "lookahead":
+        # int7 quantization: compare against the decoded weight
+        ref = jnp.einsum("...k,kn->...n", x, packed.decode())
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+    else:
+        ref = jnp.einsum("...k,kn->...n", x, pruned)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_mlp_in_model():
+    """A whole transformer with N:M-sparse MLP runs and differs from
+    dense only through the pruned weights."""
+    scfg = SparsityConfig(format="nm", n=2, m=4, block_n=8, impl="ref")
+    cfg = ModelConfig(name="t", n_layers=2, d_model=32, vocab_size=128,
+                      n_heads=2, n_kv_heads=2, d_ff=64,
+                      mlp_sparsity=scfg, remat=False)
+    p = TR.init_lm(jax.random.key(0), cfg)
+
+    # offline pass: prune+mask mlp weights (stay dense arrays — the ref
+    # path multiplies by mask structure via pruning only)
+    def prune_mlp(path, leaf):
+        names = [getattr(q, "key", "") for q in path]
+        if any(n in ("w_in", "w_gate", "w_out") for n in names):
+            flat = leaf.reshape(-1, leaf.shape[-1]).astype(jnp.float32)
+            wp, _ = pruning.n_m(flat, 2, 4, group=8)
+            return wp.reshape(leaf.shape).astype(leaf.dtype)
+        return leaf
+
+    p = jax.tree_util.tree_map_with_path(prune_mlp, p)
+    logits, _, _ = TR.lm_apply(p, cfg, jnp.zeros((1, 8), jnp.int32))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_lookahead_end_to_end_int7_effect():
+    """Table II setup: INT7+LSB encoding changes outputs only within
+    quantization error."""
+    rng = jax.random.key(2)
+    w = init_linear(rng, 128, 64, jnp.float32)
+    cfg = SparsityConfig(format="lookahead", sparsity=0.5)
+    pruned, _ = prune_weight(w, cfg)
+    packed = sparsify_weight(w, cfg)
+    x = jax.random.normal(jax.random.key(3), (16, 128))
+    out_fp = x @ pruned
+    out_q = apply_linear(x, packed, cfg)
+    rel = float(jnp.linalg.norm(out_q - out_fp) / jnp.linalg.norm(out_fp))
+    assert rel < 0.02   # ≈ int7 quantization noise, not structural error

@@ -1,0 +1,137 @@
+"""Packed formats: densify round-trips and format metadata."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pruning, sparsity
+from repro.core.sparse_linear import (SparsityConfig, abstract_pack,
+                                      pack_weight, prune_weight,
+                                      sparsify_weight)
+
+import jax
+
+
+def rand_w(seed, shape=(64, 32)):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape), jnp.float32)
+
+
+class TestBlockSparsePack:
+    @given(st.integers(0, 100), st.floats(0.0, 0.9))
+    @settings(max_examples=15, deadline=None)
+    def test_densify_roundtrip(self, seed, s):
+        w = rand_w(seed)
+        wp, _ = pruning.block_semi_structured(w, s, block=8)
+        pack = sparsity.pack_block_sparse(wp, 8, 8)
+        np.testing.assert_allclose(np.asarray(pack.densify()),
+                                   np.asarray(wp), rtol=1e-6)
+
+    def test_density(self):
+        w = jnp.zeros((32, 16)).at[:8].set(1.0)
+        pack = sparsity.pack_block_sparse(w, 8, 8)
+        assert pack.density == pytest.approx(0.25)
+
+    def test_pad_to_validation(self):
+        w = jnp.ones((32, 16))
+        with pytest.raises(ValueError):
+            sparsity.pack_block_sparse(w, 8, 8, pad_to=1)
+
+
+class TestNMPack:
+    @given(st.sampled_from([(1, 4), (2, 4)]), st.integers(0, 50))
+    @settings(max_examples=15, deadline=None)
+    def test_densify_roundtrip(self, nm, seed):
+        n, m = nm
+        w = rand_w(seed)
+        wp, _ = pruning.n_m(w, n, m, group=8)
+        pack = sparsity.pack_nm(wp, n, m, g=8)
+        np.testing.assert_allclose(np.asarray(pack.densify()),
+                                   np.asarray(wp), rtol=1e-6)
+
+    def test_projection_of_unstructured(self):
+        # packing a non-n:m weight projects to best n:m (lossy, explicit)
+        w = rand_w(9)
+        pack = sparsity.pack_nm(w, 2, 4, g=1)
+        dense = np.asarray(pack.densify())
+        kept = dense.reshape(16, 4, 32) != 0
+        assert np.all(kept.sum(axis=1) <= 2)
+
+
+class TestCombinedPack:
+    def test_densify_roundtrip(self):
+        w = rand_w(11, (128, 32))
+        wp, _ = pruning.combined_nm(w, 0.5, 2, 4, group=16, block=16)
+        pack = sparsity.pack_combined(wp, 2, 4, 16, 16)
+        np.testing.assert_allclose(np.asarray(pack.densify()),
+                                   np.asarray(wp), rtol=1e-6)
+
+
+class TestLookaheadPack:
+    def test_zero_metadata_bytes(self):
+        w = rand_w(12)
+        pack = sparsity.LookaheadPack.from_float(w)
+        assert sparsity.metadata_bytes(pack) == 0   # the headline property
+
+    def test_decode_close(self):
+        w = rand_w(13)
+        wp, _ = pruning.block_semi_structured(w, 0.5, block=4)
+        pack = sparsity.LookaheadPack.from_float(wp)
+        dec = np.asarray(pack.decode())
+        err = np.abs(dec - np.asarray(wp)).max()
+        assert err < np.abs(np.asarray(wp)).max() / 50   # int7 quant error
+
+    def test_to_block_sparse_bridge(self):
+        w = rand_w(14, (128, 32))
+        wp, _ = pruning.block_semi_structured(w, 0.75, block=64)
+        pack = sparsity.LookaheadPack.from_float(wp)
+        bsp = pack.to_block_sparse(64, 32)
+        np.testing.assert_allclose(np.asarray(bsp.densify()),
+                                   np.asarray(pack.decode()), rtol=1e-5)
+
+    def test_skip_lists_match_masks(self):
+        w = rand_w(15, (64, 4))
+        wp, _ = pruning.block_semi_structured(w, 0.5, block=4)
+        pack = sparsity.LookaheadPack.from_float(wp)
+        lists = sparsity.skip_lists_from_encoded(np.asarray(pack.enc))
+        wnp = np.asarray(wp)
+        for j, visited in enumerate(lists):
+            nz = {b for b in range(16) if wnp[4 * b:4 * b + 4, j].any()}
+            assert nz <= set(visited)
+
+
+class TestPytreeBehaviour:
+    def test_packs_are_pytrees(self):
+        w = rand_w(16)
+        for fmt in ("block", "nm", "combined", "lookahead"):
+            cfg = SparsityConfig(format=fmt, sparsity=0.5, n=2, m=4,
+                                 block_k=16, block_n=8)
+            pack = sparsify_weight(w, cfg)
+            leaves = jax.tree.leaves(pack)
+            assert leaves, fmt
+            re = jax.tree.map(lambda x: x, pack)
+            assert type(re) is type(pack)
+
+    def test_abstract_pack_matches_concrete_structure(self):
+        """The dry-run's ShapeDtypeStruct packs must mirror real packs."""
+        w = rand_w(17, (64, 32))
+        for fmt in ("nm", "lookahead"):
+            cfg = SparsityConfig(format=fmt, sparsity=0.5, n=2, m=4,
+                                 block_k=16, block_n=8)
+            concrete = sparsify_weight(w, cfg)
+            abstract = abstract_pack(64, 32, cfg, dtype=jnp.float32)
+            ts_c = jax.tree.structure(concrete)
+            ts_a = jax.tree.structure(abstract)
+            assert ts_c == ts_a, fmt
+
+
+class TestFormatStats:
+    def test_metadata_fraction(self):
+        """Table III analogue: metadata stays a small fraction of values."""
+        w = rand_w(18, (256, 128))
+        wp, _ = pruning.n_m(w, 2, 4, group=128)
+        pack = sparsity.pack_nm(wp, 2, 4, g=128)
+        meta = sparsity.metadata_bytes(pack)
+        vals = sparsity.values_bytes(pack)
+        assert meta / vals < 0.05
