@@ -56,8 +56,9 @@ def run() -> dict:
     return {"rows": rows}
 
 
-def main() -> None:
-    out = run()
+def main(out=None) -> None:
+    if out is None:
+        out = run()
     print("# Fig. 10 — model-level speedups with CSA "
           "(+ Table I USSA/SSSA bands)")
     print("model,x_us,x_ss,csa_speedup,sssa_speedup,ussa_speedup")

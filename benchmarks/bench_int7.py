@@ -92,8 +92,9 @@ def run() -> dict:
     return {"rows": rows}
 
 
-def main() -> None:
-    out = run()
+def main(out=None) -> None:
+    if out is None:
+        out = run()
     print("# Table II — INT8 vs INT7 (lookahead bit): accuracy + "
           "fp32-prediction agreement")
     print("model,acc_fp32,acc_int8,acc_int7,acc_delta_pts,"

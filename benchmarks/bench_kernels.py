@@ -1,15 +1,23 @@
-"""Kernel micro-benchmarks (beyond-paper): wall-clock of the jnp
-reference paths on CPU (what this container can time) plus the structural
-FLOP/byte reductions of each kernel (what the TPU roofline credits).
+"""Kernel micro-benchmarks (beyond-paper): wall-clock of the dispatched
+CPU paths (what this container can time) plus the structural FLOP/byte
+reductions of each kernel (what the TPU roofline credits).
 
-interpret=True Pallas timings are *correctness* artifacts (Python
-interpretation, orders of magnitude off); we time the compiled reference
-path, whose FLOP structure matches the kernels, and report both the
-measured CPU speedup and the structural FLOP fraction.
+All matmuls go through ``repro.kernels.dispatch`` — the same layer the
+models and the serving engine use — so these numbers time the real
+dispatch decision (kernel registry + backend fallback), not a
+hand-wired kernel call.  interpret=True Pallas timings are *correctness*
+artifacts (Python interpretation, orders of magnitude off); off-TPU the
+dispatcher resolves to the compiled reference path, whose FLOP structure
+matches the kernels, and we report measured speedup plus the structural
+FLOP fraction.
+
+Shapes shrink under ``REPRO_BENCH_SMOKE=1`` (the CI smoke step) so one
+pass stays in seconds.
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -17,15 +25,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pruning, sparsity
-from repro.kernels import ops
+from repro.kernels import dispatch
 
-M, K, N = 256, 2048, 2048
-REPS = 20
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+M, K, N = (64, 256, 256) if SMOKE else (256, 2048, 2048)
+REPS = 3 if SMOKE else 20
 
 
 def _time(fn, *args) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(REPS):
         out = fn(*args)
@@ -33,62 +41,64 @@ def _time(fn, *args) -> float:
     return (time.perf_counter() - t0) / REPS * 1e6     # µs
 
 
+def _gflops(flops: float, us: float) -> float:
+    return flops / (us * 1e-6) / 1e9 if us > 0 else 0.0
+
+
 def run() -> dict:
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    dense_flops = 2.0 * M * K * N
 
-    dense = jax.jit(lambda x, w: x @ w)
+    dense = jax.jit(lambda x, w: dispatch.sparse_matmul(x, w))
     t_dense = _time(dense, x, w)
 
-    rows = [{"kernel": "dense", "us": t_dense, "flop_frac": 1.0,
-             "speedup": 1.0}]
+    rows = [{"kernel": "dense", "dispatched": "dense", "us": t_dense,
+             "flop_frac": 1.0, "speedup": 1.0,
+             "gflops": _gflops(dense_flops, t_dense)}]
+
+    def bench(label, pack, flop_frac):
+        d = dispatch.select(pack, M=M)
+        f = jax.jit(lambda x, p=pack: dispatch.sparse_matmul(x, p))
+        t = _time(f, x)
+        rows.append({"kernel": label, "dispatched": f"{d.kernel}/{d.mode}",
+                     "us": t, "flop_frac": flop_frac,
+                     "speedup": t_dense / t,
+                     "gflops": _gflops(dense_flops * flop_frac, t)})
 
     # block-skip (SSSA analogue) at 50/75% block sparsity
     for s in (0.5, 0.75):
         wp, _ = pruning.block_semi_structured(w, s, block=128)
-        pack = sparsity.pack_block_sparse(wp, 128, 128)
-        f = jax.jit(lambda x, p=pack: ops.block_sparse_matmul(x, p,
-                                                              impl="ref"))
-        t = _time(f, x)
-        rows.append({"kernel": f"block_skip(x={s})", "us": t,
-                     "flop_frac": 1 - s, "speedup": t_dense / t})
+        bench(f"block_skip(x={s})",
+              sparsity.pack_block_sparse(wp, 128, 128), 1 - s)
 
     # N:M compressed (USSA analogue)
     for n, m in ((2, 4), (1, 4)):
         wp, _ = pruning.n_m(w, n, m, group=128)
-        pack = sparsity.pack_nm(wp, n, m, g=128)
-        f = jax.jit(lambda x, p=pack: ops.nm_matmul(x, p, impl="ref"))
-        t = _time(f, x)
-        rows.append({"kernel": f"nm({n}:{m})", "us": t,
-                     "flop_frac": n / m, "speedup": t_dense / t})
+        bench(f"nm({n}:{m})", sparsity.pack_nm(wp, n, m, g=128), n / m)
 
     # combined (CSA analogue)
     wp, _ = pruning.combined_nm(w, 0.5, 2, 4, group=128, block=128)
-    pack = sparsity.pack_combined(wp, 2, 4, 128, 128)
-    f = jax.jit(lambda x, p=pack: ops.combined_matmul(x, p, impl="ref"))
-    t = _time(f, x)
-    rows.append({"kernel": "combined(0.5,2:4)", "us": t,
-                 "flop_frac": 0.25, "speedup": t_dense / t})
+    bench("combined(0.5,2:4)",
+          sparsity.pack_combined(wp, 2, 4, 128, 128), 0.25)
 
     # faithful lookahead (storage-optimal; FLOPs = dense)
     wp, _ = pruning.block_semi_structured(w, 0.5, block=4)
-    pack = sparsity.LookaheadPack.from_float(wp)
-    f = jax.jit(lambda x, p=pack: ops.lookahead_matmul(x, p, impl="ref"))
-    t = _time(f, x)
-    rows.append({"kernel": "lookahead(int7)", "us": t, "flop_frac": 1.0,
-                 "speedup": t_dense / t})
-    return {"rows": rows, "shape": (M, K, N)}
+    bench("lookahead(int7)", sparsity.LookaheadPack.from_float(wp), 1.0)
+    return {"rows": rows, "shape": (M, K, N), "backend": jax.default_backend()}
 
 
-def main() -> None:
-    out = run()
-    print(f"# kernel micro-bench — x({M},{K}) @ w({K},{N}), f32, CPU ref "
-          "path")
-    print("kernel,us_per_call,flop_fraction,speedup_vs_dense")
+def main(out=None) -> None:
+    if out is None:
+        out = run()
+    print(f"# kernel micro-bench — x({M},{K}) @ w({K},{N}), f32, "
+          f"{out['backend']} dispatch path")
+    print("kernel,dispatched,us_per_call,flop_fraction,speedup_vs_dense,"
+          "gflops")
     for r in out["rows"]:
-        print(f"{r['kernel']},{r['us']:.0f},{r['flop_frac']:.2f},"
-              f"{r['speedup']:.2f}")
+        print(f"{r['kernel']},{r['dispatched']},{r['us']:.0f},"
+              f"{r['flop_frac']:.2f},{r['speedup']:.2f},{r['gflops']:.2f}")
 
 
 if __name__ == "__main__":

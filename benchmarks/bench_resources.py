@@ -19,9 +19,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import analytical, pruning, sparsity
+from repro.core import analytical, sparsity
 from repro.core.sparse_linear import SparsityConfig, sparsify_weight
 
 K = N = 4096
@@ -83,8 +82,9 @@ def run() -> dict:
     return {"rows": rows}
 
 
-def main() -> None:
-    out = run()
+def main(out=None) -> None:
+    if out is None:
+        out = run()
     print("# Table III analogue — per-format TPU resource costs "
           f"({K}x{N} weight, 50% sparsity / 2:4)")
     print("format,values_MB,metadata_KB,meta_pct,vmem_KB,flop_fraction")

@@ -35,8 +35,9 @@ def run() -> dict:
     return {"rows": rows}
 
 
-def main() -> None:
-    out = run()
+def main(out=None) -> None:
+    if out is None:
+        out = run()
     print("# Fig. 9 — SSSA speedup vs semi-structured (4:4) sparsity")
     print("x_blocks,s_analytical,s_observed_simulated")
     crossover = False

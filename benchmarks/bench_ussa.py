@@ -35,8 +35,9 @@ def run() -> dict:
     return {"rows": rows, "worst_rel": worst_rel}
 
 
-def main() -> None:
-    out = run()
+def main(out=None) -> None:
+    if out is None:
+        out = run()
     print("# Fig. 8 — USSA speedup vs unstructured sparsity")
     print("x,s_analytical,s_observed_closed_form,s_simulated")
     for x, s_a, s_o, s_sim in out["rows"]:

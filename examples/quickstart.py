@@ -13,21 +13,18 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import analytical, encoding, pruning, sparsity
 from repro.core.cycle_model import Design, linear_layer_cycles
-from repro.kernels import ops
+from repro.kernels import dispatch
 
 
 def main():
     rng = np.random.default_rng(0)
     K, N = 512, 256
     w = jnp.asarray(rng.normal(size=(K, N)) / np.sqrt(K), jnp.float32)
-    x = jnp.asarray(rng.normal(size=(8, K)), jnp.float32)
-    dense_out = x @ w
 
     print("=== 1. pruning (paper Fig. 1 structures) ===")
     w_ss, m_ss = pruning.block_semi_structured(w, 0.5, block=4)
@@ -51,13 +48,14 @@ def main():
         pruning.block_semi_structured(w, 0.5, block=128)[0], 128, 128)
     pack_n = sparsity.pack_nm(w_nm, 2, 4, g=128)
     xp = jnp.asarray(rng.normal(size=(128, K)), jnp.float32)
-    for name, fn, pack in (
-            ("block-skip (SSSA)", ops.block_sparse_matmul, pack_b),
-            ("2:4 compressed (USSA)", ops.nm_matmul, pack_n)):
-        out_k = fn(xp, pack, impl="kernel")
-        out_r = fn(xp, pack, impl="ref")
+    for name, pack in (("block-skip (SSSA)", pack_b),
+                       ("2:4 compressed (USSA)", pack_n)):
+        sel = dispatch.select(pack, M=xp.shape[0], impl="kernel")
+        out_k = dispatch.sparse_matmul(xp, pack, impl="kernel")
+        out_r = dispatch.sparse_matmul(xp, pack, impl="ref")
         err = float(jnp.max(jnp.abs(out_k - out_r)))
-        print(f"  {name:24s} kernel-vs-ref max err {err:.2e}")
+        print(f"  {name:24s} -> {sel.kernel}/{sel.mode} "
+              f"kernel-vs-ref max err {err:.2e}")
 
     print("\n=== 4. what the FPGA would see (cycle model) ===")
     base = linear_layer_cycles(np.asarray(m_ss, bool), Design.BASELINE_SIMD)

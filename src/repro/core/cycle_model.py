@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterable, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 

@@ -38,7 +38,6 @@ Paper deviations (recorded in DESIGN.md §2):
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

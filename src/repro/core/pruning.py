@@ -30,7 +30,6 @@ matching the paper's Algorithm 1 walk over ``kernel[h][w][c]``.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Tuple
 
 import jax

@@ -10,7 +10,8 @@ co-design flow (Fig. 2):
   2. ``prune_params`` — offline pruning pass (Section IV-C);
   3. ``pack_params`` — offline packing into the configured format
      (Algorithm 1+2 for ``lookahead``; tile/N:M packing for the TPU forms);
-  4. forward dispatches through ``kernels.ops.sparse_matmul``.
+  4. forward dispatches through ``kernels.dispatch.sparse_matmul`` (kernel
+     registry + CPU fallback + autotuned block sizes).
 
 For the multi-pod dry-run (no real weights), :func:`abstract_params`
 produces the same pytree out of ``ShapeDtypeStruct`` leaves with a nominal
@@ -26,7 +27,6 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import pruning, sparsity
 from repro.core.sparsity import (BlockSparsePack, CombinedPack, LookaheadPack,
@@ -43,7 +43,9 @@ class SparsityConfig:
     ``sparsity``: target block sparsity for block/combined (paper's x_ss)
     ``n, m``: N:M pattern for nm/combined (paper's unstructured x_us ≈ 1-n/m)
     ``block_k, block_n``: skip-tile geometry (TPU analogue of the paper's 4)
-    ``impl``: ``auto | kernel | ref`` kernel dispatch (ops.py)
+    ``impl``: ``auto | kernel | ref | interpret | compiled`` execution-mode
+    request forwarded to ``kernels.dispatch`` (``auto`` = compiled on TPU,
+    pure-jnp ref elsewhere)
     """
     format: str = "dense"
     sparsity: float = 0.5
@@ -220,15 +222,17 @@ def apply_linear(x: Array, weight: Any, cfg: SparsityConfig = DENSE) -> Array:
     """``x (..., K) @ weight (K, N) -> (..., N)`` for any format.
 
     Leading dims are flattened to the kernel's M dimension and restored.
+    Kernel choice, backend fallback and block sizes are the dispatcher's
+    job (``kernels.dispatch``) — this layer only normalizes shapes.
     """
-    from repro.kernels import ops  # local import: kernels pull in pallas
+    from repro.kernels import dispatch  # local import: kernels pull in pallas
 
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
     if isinstance(weight, (BlockSparsePack, NMPack, CombinedPack,
                            LookaheadPack)):
-        out = ops.sparse_matmul(x2, weight, impl=cfg.impl)
+        out = dispatch.sparse_matmul(x2, weight, impl=cfg.impl)
         N = weight.N
     else:
         out = jnp.dot(x2, weight)

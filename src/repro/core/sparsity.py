@@ -34,14 +34,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import encoding
-from repro.core.encoding import BLOCK, SKIP_CAP
+from repro.core.encoding import SKIP_CAP
 
 Array = jax.Array
 

@@ -51,8 +51,23 @@ def axis_size(name: str) -> int:
     return sizes.get(name, 1) if sizes else 1
 
 
+def _get_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh`` moved between jax releases;
+    resolve whichever home this jax provides (None when unavailable)."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is None:
+        try:
+            from jax._src.mesh import get_abstract_mesh as getter
+        except ImportError:
+            return None
+    try:
+        return getter()
+    except Exception:
+        return None
+
+
 def _ambient_sizes() -> Optional[dict]:
-    am = jax.sharding.get_abstract_mesh()
+    am = _get_abstract_mesh()
     if am is not None and not getattr(am, "empty", False) \
             and tuple(getattr(am, "axis_names", ()) or ()):
         return dict(am.shape)

@@ -28,14 +28,27 @@ and the §Perf loop tightens specs per cell from there.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
+
+
+def abstract_mesh(sizes: Tuple[int, ...], names: Tuple[str, ...]):
+    """Version-portable ``AbstractMesh`` constructor.
+
+    jax ≤ 0.4.x takes one ``((name, size), ...)`` pairs tuple; newer jax
+    takes ``(sizes, names)``.  Tests and the dry-run build their production
+    meshes through this so the repo runs on either API.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(sizes, names)           # new-style signature
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
 
 
 def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:

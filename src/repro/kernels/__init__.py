@@ -1,3 +1,14 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the paper's sparse functional units + dispatch.
+
+Layout:
+  * ``nm_spmm`` / ``bsr_matmul`` / ``csa_matmul`` / ``lookahead_decode`` /
+    ``flash_attention`` — the Pallas TPU kernels (USSA / SSSA / CSA
+    analogues + the faithful LSB decode and fused attention);
+  * ``ref``      — pure-jnp oracles (also the CPU production path);
+  * ``ops``      — thin per-format jit'd wrappers (kernel tests use these);
+  * ``dispatch`` — the public entry point: kernel registry, sparsity-
+    descriptor selection, CPU interpret/ref fallback, autotune cache.
+
+Callers outside this package import ``repro.kernels.dispatch`` only.
+This module stays import-light on purpose (no eager pallas import).
+"""

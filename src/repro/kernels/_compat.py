@@ -1,0 +1,14 @@
+"""Pallas API names that moved between jax releases, resolved once.
+
+Kernel modules import from here instead of feature-testing ``pltpu``
+themselves; this keeps every kernel importable on any jax this repo
+supports (0.4.x names things ``TPUCompilerParams``, newer jax drops the
+prefix).
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

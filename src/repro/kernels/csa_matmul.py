@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.core.sparsity import CombinedPack
 
 
@@ -80,7 +82,7 @@ def csa_matmul(x: jax.Array, pack: CombinedPack, *, bm: int = 128,
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, pack.N), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
                                  pltpu.ARBITRARY)),
         interpret=interpret,

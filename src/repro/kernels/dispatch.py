@@ -1,0 +1,593 @@
+"""Unified sparse-kernel dispatch: registry + backend fallback + autotune.
+
+This is the software half of the paper's co-design move: the FPGA picks a
+functional unit (USSA / SSSA / CSA) to match the sparsity pattern of each
+layer; here a registry picks a Pallas kernel (``nm_spmm`` / ``bsr_matmul``
+/ ``csa_matmul`` / ``lookahead_decode``) — or the pure-jnp reference — from
+a :class:`SparsityDescriptor` derived from the packed weight.  Callers
+(``core.sparse_linear``, the model layers, ``serving.engine``, every
+``benchmarks/bench_*``) go through :func:`sparse_matmul` and never name a
+kernel directly.
+
+Three execution modes, resolved per call:
+
+  * ``compiled``  — real Pallas lowering; only when a TPU backend is
+                    present.  Block sizes come from the autotune cache.
+  * ``interpret`` — ``pallas_call(interpret=True)``; exercises the exact
+                    kernel logic on CPU (slow: tests/debugging only).
+  * ``ref``       — the jnp oracle in ``kernels/ref.py``; the CPU
+                    production path (same FLOP/byte structure as the
+                    kernel, compiles under XLA anywhere).
+
+``impl`` accepted by every entry point:
+  ``auto``   → compiled on TPU, ref elsewhere (suite runs green on CPU);
+  ``kernel`` → compiled on TPU, interpret elsewhere;
+  ``ref`` / ``interpret`` / ``compiled`` → forced.
+``REPRO_DISPATCH_MODE`` overrides the resolution globally (CI uses it).
+
+Autotune: for the compiled path, a small sweep over ``bm``/``bkc``
+candidates is timed once per ``(kernel, M, K, N, dtype, pattern)`` key and
+persisted to a JSON cache (``REPRO_AUTOTUNE_CACHE`` or
+``~/.cache/repro/autotune.json``), so steady-state dispatch is a dict
+lookup.  ``ref`` mode never sweeps; ``interpret`` sweeps only when asked
+(tests use it to exercise the machinery on tiny shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import (BlockSparsePack, CombinedPack, LookaheadPack,
+                                 NMPack)
+from repro.kernels import ref as _ref
+
+Array = jax.Array
+
+PACK_TYPES = (BlockSparsePack, NMPack, CombinedPack, LookaheadPack)
+
+MODES = ("compiled", "interpret", "ref")
+IMPLS = ("auto", "kernel") + MODES
+
+
+# ---------------------------------------------------------------------------
+# Sparsity descriptor — what the registry selects on
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SparsityDescriptor:
+    """Structural summary of a weight: the dispatch key.
+
+    ``pattern`` is the human-readable sparsity signature used in cache
+    keys and logs: ``"2:4g128"``, ``"bsr128x128d0.50"``, ``"dense"``, …
+    """
+    kind: str                      # dense | block | nm | combined | lookahead
+    K: int
+    N: int
+    dtype: str
+    n: Optional[int] = None        # N:M pattern (nm / combined)
+    m: Optional[int] = None
+    g: Optional[int] = None        # column-group width (nm)
+    bk: Optional[int] = None       # skip-tile geometry (block / combined)
+    bn: Optional[int] = None
+    density: Optional[float] = None  # non-zero tile fraction (block/combined)
+
+    @property
+    def pattern(self) -> str:
+        if self.kind == "nm":
+            return f"{self.n}:{self.m}g{self.g}"
+        if self.kind == "block":
+            return f"bsr{self.bk}x{self.bn}d{self.density:.2f}"
+        if self.kind == "combined":
+            return (f"csa{self.bk}x{self.bn}d{self.density:.2f}"
+                    f"+{self.n}:{self.m}")
+        return self.kind
+
+    @classmethod
+    def of(cls, weight: Any) -> "SparsityDescriptor":
+        """Build the descriptor for a dense array or any pack."""
+        if isinstance(weight, NMPack):
+            return cls(kind="nm", K=weight.K, N=weight.N,
+                       dtype=str(weight.values.dtype),
+                       n=weight.n, m=weight.m, g=weight.g)
+        if isinstance(weight, BlockSparsePack):
+            return cls(kind="block", K=weight.K, N=weight.N,
+                       dtype=str(weight.values.dtype),
+                       bk=weight.bk, bn=weight.bn,
+                       density=_tile_density(weight))
+        if isinstance(weight, CombinedPack):
+            return cls(kind="combined", K=weight.K, N=weight.N,
+                       dtype=str(weight.values.dtype),
+                       n=weight.n, m=weight.m, bk=weight.bk, bn=weight.bn,
+                       density=_tile_density(weight))
+        if isinstance(weight, LookaheadPack):
+            return cls(kind="lookahead", K=weight.K, N=weight.N,
+                       dtype=str(weight.enc.dtype))
+        if hasattr(weight, "shape") and len(weight.shape) >= 2:
+            return cls(kind="dense", K=weight.shape[-2], N=weight.shape[-1],
+                       dtype=str(weight.dtype))
+        raise TypeError(f"cannot describe weight of type {type(weight)}")
+
+
+def _tile_density(pack) -> float:
+    """Non-zero-tile fraction without forcing device sync on traced packs."""
+    try:
+        import numpy as np
+        total = (pack.K // pack.bk) * (pack.N // pack.bn)
+        return float(np.asarray(pack.counts).sum()) / max(total, 1)
+    except Exception:            # abstract/traced counts: geometry bound
+        return min(1.0, pack.max_nnz / max(pack.K // pack.bk, 1))
+
+
+# ---------------------------------------------------------------------------
+# Mode resolution — the CPU-fallback policy in one place
+# ---------------------------------------------------------------------------
+
+def has_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_mode(impl: str = "auto") -> str:
+    """impl → concrete execution mode, honoring REPRO_DISPATCH_MODE."""
+    forced = os.environ.get("REPRO_DISPATCH_MODE", "")
+    if forced:
+        if forced not in MODES:
+            raise ValueError(f"REPRO_DISPATCH_MODE={forced!r} not in {MODES}")
+        return forced
+    if impl not in IMPLS:
+        raise ValueError(f"impl {impl!r} not in {IMPLS}")
+    if impl == "auto":
+        return "compiled" if has_tpu() else "ref"
+    if impl == "kernel":
+        return "compiled" if has_tpu() else "interpret"
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache — JSON-persisted (kernel, shape, dtype, pattern) → blocks
+# ---------------------------------------------------------------------------
+
+def _default_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "autotune.json"))
+
+
+class AutotuneCache:
+    """Tiny persistent map: dispatch key → {"bm": .., "bkc": .., "us": ..}.
+
+    Load-on-first-use; every ``put`` rewrites the file (entries are rare —
+    one per distinct layer geometry).  Corrupt/missing files start empty.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or _default_cache_path()
+        self._data: Optional[Dict[str, dict]] = None
+        self._lock = threading.Lock()
+
+    def _load(self) -> Dict[str, dict]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    self._data = json.load(f)
+            except (OSError, ValueError):
+                self._data = {}
+        return self._data
+
+    def get(self, key: str) -> Optional[dict]:
+        return self._load().get(key)
+
+    def put(self, key: str, value: dict) -> None:
+        with self._lock:
+            data = self._load()
+            data[key] = value
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data = {}
+            try:
+                os.remove(self.path)
+            except OSError:
+                pass
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+
+_CACHE = AutotuneCache()
+
+
+def autotune_cache() -> AutotuneCache:
+    """The process-global cache (tests swap it via ``set_autotune_cache``)."""
+    return _CACHE
+
+
+def set_autotune_cache(cache: AutotuneCache) -> AutotuneCache:
+    global _CACHE
+    old, _CACHE = _CACHE, cache
+    return old
+
+
+def cache_key(kernel: str, M: int, desc: SparsityDescriptor,
+              mode: str) -> str:
+    return (f"{kernel}|M{M}|K{desc.K}|N{desc.N}|{desc.dtype}"
+            f"|{desc.pattern}|{mode}")
+
+
+# ---------------------------------------------------------------------------
+# Kernel registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    """One dispatchable kernel.
+
+    ``supports(desc, M)`` — structural eligibility (format + divisibility).
+    ``run(x, weight, mode, blocks)`` — execute; ``blocks`` holds tuned
+    tile sizes (subset of ``tunable``).
+    ``candidates(desc, M)`` — autotune sweep points, list of block dicts.
+    """
+    name: str
+    kind: str                                       # descriptor kind served
+    supports: Callable[[SparsityDescriptor, int], bool]
+    run: Callable[[Array, Any, str, dict], Array]
+    candidates: Callable[[SparsityDescriptor, int], List[dict]]
+    priority: int = 0                               # higher wins within kind
+
+
+_REGISTRY: Dict[str, KernelEntry] = {}
+
+
+def register(entry: KernelEntry) -> KernelEntry:
+    if entry.name in _REGISTRY:
+        raise ValueError(f"kernel {entry.name!r} already registered")
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def registry() -> Dict[str, KernelEntry]:
+    return dict(_REGISTRY)
+
+
+def _bm_candidates(M: int) -> List[int]:
+    out = [bm for bm in (64, 128, 256) if bm <= max(M, 64)]
+    return out or [64]
+
+
+def _bkc_for(desc: SparsityDescriptor, cap: int = 128) -> int:
+    """Largest bkc ≤ cap dividing Kc and a multiple of n (nm_spmm rule)."""
+    Kc = desc.K * desc.n // desc.m
+    for bkc in range(min(cap, Kc), desc.n, -1):
+        if Kc % bkc == 0 and bkc % desc.n == 0:
+            return bkc
+    return desc.n        # Kc = (K//m)·n, so n always divides Kc
+
+
+def _pad_m(x: Array, bm: int) -> Tuple[Array, int]:
+    M = x.shape[0]
+    pad = (-M) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, M
+
+
+# --- entries ---------------------------------------------------------------
+
+def _nm_run(x, pack, mode, blocks):
+    if mode == "ref":
+        return _ref.nm_spmm_ref(x, pack)
+    from repro.kernels.nm_spmm import nm_spmm
+    bm = blocks.get("bm", 128)
+    bkc = blocks.get("bkc") or _bkc_for(SparsityDescriptor.of(pack))
+    xp, M = _pad_m(x, bm)
+    out = nm_spmm(xp, pack, bm=bm, bkc=bkc, interpret=(mode == "interpret"))
+    return out[:M]
+
+
+def _nm_candidates(desc, M):
+    cands = []
+    for bm in _bm_candidates(M):
+        for cap in (64, 128, 256):
+            bkc = _bkc_for(desc, cap)
+            if {"bm": bm, "bkc": bkc} not in cands:
+                cands.append({"bm": bm, "bkc": bkc})
+    return cands
+
+
+register(KernelEntry(
+    name="nm_spmm", kind="nm",
+    supports=lambda d, M: (d.K % d.m == 0 and d.N % d.g == 0
+                           and (d.K * d.n // d.m) % d.n == 0),
+    run=_nm_run, candidates=_nm_candidates))
+
+
+def _bsr_run(x, pack, mode, blocks):
+    if mode == "ref":
+        return _ref.bsr_matmul_ref(x, pack)
+    from repro.kernels.bsr_matmul import bsr_matmul
+    bm = blocks.get("bm", 128)
+    xp, M = _pad_m(x, bm)
+    out = bsr_matmul(xp, pack, bm=bm, interpret=(mode == "interpret"))
+    return out[:M]
+
+
+register(KernelEntry(
+    name="bsr_matmul", kind="block",
+    supports=lambda d, M: d.K % d.bk == 0 and d.N % d.bn == 0,
+    run=_bsr_run,
+    candidates=lambda d, M: [{"bm": bm} for bm in _bm_candidates(M)]))
+
+
+def _csa_run(x, pack, mode, blocks):
+    if mode == "ref":
+        return _ref.csa_matmul_ref(x, pack)
+    from repro.kernels.csa_matmul import csa_matmul
+    bm = blocks.get("bm", 128)
+    xp, M = _pad_m(x, bm)
+    out = csa_matmul(xp, pack, bm=bm, interpret=(mode == "interpret"))
+    return out[:M]
+
+
+register(KernelEntry(
+    name="csa_matmul", kind="combined",
+    supports=lambda d, M: d.K % d.bk == 0 and d.N % d.bn == 0,
+    run=_csa_run,
+    candidates=lambda d, M: [{"bm": bm} for bm in _bm_candidates(M)]))
+
+
+def _lookahead_run(x, pack, mode, blocks):
+    if mode == "ref":
+        return _ref.lookahead_matmul_ref(x, pack)
+    from repro.kernels.lookahead_decode import lookahead_matmul
+    bm = blocks.get("bm", 128)
+    bk = min(blocks.get("bk", 128), pack.K)
+    bn = min(blocks.get("bn", 128), pack.N)
+    xp, M = _pad_m(x, bm)
+    out = lookahead_matmul(xp, pack, bm=bm, bk=bk, bn=bn,
+                           interpret=(mode == "interpret"))
+    return out[:M]
+
+
+register(KernelEntry(
+    name="lookahead_decode", kind="lookahead",
+    supports=lambda d, M: True,
+    run=_lookahead_run,
+    candidates=lambda d, M: [{"bm": bm} for bm in _bm_candidates(M)]))
+
+
+def _dense_run(x, w, mode, blocks):
+    return jnp.dot(x, w)
+
+
+register(KernelEntry(
+    name="dense", kind="dense",
+    supports=lambda d, M: True,
+    run=_dense_run,
+    candidates=lambda d, M: [{}]))
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """What dispatch resolved for one (x, weight) call."""
+    kernel: str
+    mode: str
+    blocks: Dict[str, int]
+    descriptor: SparsityDescriptor
+    reason: str = ""
+
+
+def _ref_decision(desc: SparsityDescriptor, entry_name: str,
+                  reason: str) -> Decision:
+    return Decision(kernel=entry_name, mode="ref", blocks={},
+                    descriptor=desc, reason=reason)
+
+
+def select(weight: Any, M: int = 128, impl: str = "auto",
+           autotune: Optional[bool] = None) -> Decision:
+    """Pick (kernel, mode, block sizes) for ``x (M, K) @ weight``.
+
+    Pure function of structure — no execution.  ``autotune=None`` means
+    "sweep on compiled-path cache miss"; ``False`` uses defaults on miss;
+    ``True`` forces a sweep even in interpret mode (tests).
+    """
+    desc = SparsityDescriptor.of(weight)
+    mode = resolve_mode(impl)
+    entry = _entry_for(desc, M)
+    if entry is None:
+        # registered kernels can't serve this geometry — ref always can
+        fallback = _REGISTRY["dense"] if desc.kind == "dense" else None
+        name = fallback.name if fallback else f"{desc.kind}-ref"
+        return _ref_decision(desc, name, "no kernel supports geometry")
+    if desc.kind == "dense":
+        return Decision(kernel="dense", mode="compiled", blocks={},
+                        descriptor=desc, reason="dense weight")
+    if mode == "ref":
+        return _ref_decision(desc, entry.name, "cpu fallback")
+    blocks = _blocks_for(entry, desc, M, mode, autotune)
+    return Decision(kernel=entry.name, mode=mode, blocks=blocks,
+                    descriptor=desc,
+                    reason="tpu" if mode == "compiled" else "forced kernel")
+
+
+def _entry_for(desc: SparsityDescriptor, M: int) -> Optional[KernelEntry]:
+    best = None
+    for e in _REGISTRY.values():
+        if e.kind != desc.kind:
+            continue
+        if not e.supports(desc, M):
+            continue
+        if best is None or e.priority > best.priority:
+            best = e
+    return best
+
+
+def _blocks_for(entry: KernelEntry, desc: SparsityDescriptor, M: int,
+                mode: str, autotune: Optional[bool]) -> Dict[str, int]:
+    cands = entry.candidates(desc, M)
+    default = _default_blocks(cands, M)
+    if mode == "interpret" and not autotune:
+        return default
+    key = cache_key(entry.name, M, desc, mode)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return {k: v for k, v in hit.items() if k != "us"}
+    if autotune is False:
+        return default
+    return default          # sweep happens at call time (needs operands)
+
+
+def _default_blocks(cands: List[dict], M: int) -> Dict[str, int]:
+    # prefer the 128-row tile (MXU-shaped) when present, else first listed
+    for c in cands:
+        if c.get("bm", 128) == 128:
+            return dict(c)
+    return dict(cands[0]) if cands else {}
+
+
+# ---------------------------------------------------------------------------
+# Autotune sweep
+# ---------------------------------------------------------------------------
+
+def _time_call(fn: Callable[[], Array], reps: int = 3) -> float:
+    jax.block_until_ready(fn())                     # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def tune(x: Array, weight: Any, mode: str = "compiled",
+         candidates: Optional[Sequence[dict]] = None,
+         cache: Optional[AutotuneCache] = None,
+         reps: int = 3) -> Dict[str, int]:
+    """Sweep block-size candidates for (x, weight); persist + return best.
+
+    Used by the compiled path on cache miss and directly by tests /
+    benchmarks (which pass ``mode="interpret"`` or ``"ref"`` off-TPU).
+    """
+    desc = SparsityDescriptor.of(weight)
+    entry = _entry_for(desc, x.shape[0])
+    if entry is None or desc.kind == "dense":
+        return {}
+    cache = cache or _CACHE
+    key = cache_key(entry.name, x.shape[0], desc, mode)
+    hit = cache.get(key)
+    if hit is not None:
+        return {k: v for k, v in hit.items() if k != "us"}
+    cands = list(candidates) if candidates is not None \
+        else entry.candidates(desc, x.shape[0])
+    best, best_us = None, float("inf")
+    for blocks in cands:
+        try:
+            us = _time_call(lambda b=blocks: entry.run(x, weight, mode, b),
+                            reps=reps)
+        except Exception:
+            continue                                # illegal tiling: skip
+        if us < best_us:
+            best, best_us = dict(blocks), us
+    if best is None:                                # nothing ran: defaults
+        return _default_blocks(cands, x.shape[0])
+    cache.put(key, {**best, "us": round(best_us, 1)})
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Execution — the single entry point call sites use
+# ---------------------------------------------------------------------------
+
+def sparse_matmul(x: Array, weight: Any, *, impl: str = "auto",
+                  autotune: Optional[bool] = None) -> Array:
+    """``x (M, K) @ weight (K, N) -> (M, N)`` for dense or any pack.
+
+    Selects the kernel from the weight's sparsity descriptor, resolves the
+    execution mode for this backend, applies cached/tuned block sizes, and
+    runs.  This is the only matmul entry point call sites should import.
+    """
+    decision = select(weight, M=x.shape[0], impl=impl, autotune=autotune)
+    entry = _REGISTRY.get(decision.kernel)
+    if entry is None:                               # "<kind>-ref" fallback
+        return _ref_matmul(x, weight)
+    if decision.mode == "compiled" and decision.kernel != "dense" \
+            and not isinstance(x, jax.core.Tracer):
+        # eager compiled call with no cached tiling: sweep once, persist.
+        # Under jit tracing the sweep can't time anything — cached blocks
+        # (via `select`) or defaults apply instead.
+        key = cache_key(entry.name, x.shape[0], decision.descriptor,
+                        decision.mode)
+        if _CACHE.get(key) is None and autotune is not False:
+            blocks = tune(x, weight, mode=decision.mode)
+            return entry.run(x, weight, decision.mode, blocks)
+    return entry.run(x, weight, decision.mode, decision.blocks)
+
+
+def _ref_matmul(x: Array, weight: Any) -> Array:
+    if isinstance(weight, BlockSparsePack):
+        return _ref.bsr_matmul_ref(x, weight)
+    if isinstance(weight, NMPack):
+        return _ref.nm_spmm_ref(x, weight)
+    if isinstance(weight, CombinedPack):
+        return _ref.csa_matmul_ref(x, weight)
+    if isinstance(weight, LookaheadPack):
+        return _ref.lookahead_matmul_ref(x, weight)
+    return jnp.dot(x, weight)
+
+
+def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+              window: Optional[int] = None, softcap: Optional[float] = None,
+              scale: Optional[float] = None, impl: str = "auto",
+              bq: int = 128, bk: int = 128) -> Array:
+    """Fused attention behind the same mode policy as the matmuls."""
+    mode = resolve_mode(impl)
+    if mode == "ref":
+        return _ref.mha_ref(q, k, v, causal=causal, window=window,
+                            softcap=softcap, scale=scale)
+    from repro.kernels.flash_attention import flash_attention
+    Lq, Lk = q.shape[-2], k.shape[-2]
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, scale=scale,
+                           bq=min(bq, Lq), bk=min(bk, Lk),
+                           interpret=(mode == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# Whole-model planning (serving warm-up / introspection)
+# ---------------------------------------------------------------------------
+
+def plan_params(params: Any, M: int = 128, impl: str = "auto") -> List[dict]:
+    """Walk a param pytree and record the dispatch decision for every
+    packed weight — the serving engine calls this at build time so the
+    kernel/mode selection (and any autotune misses) is visible before the
+    first request, not during it."""
+    plan: List[dict] = []
+
+    def visit(path, leaf):
+        if isinstance(leaf, PACK_TYPES):
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", "?")))
+                            for p in path)
+            d = select(leaf, M=M, impl=impl)
+            plan.append({"param": name, "kernel": d.kernel, "mode": d.mode,
+                         "blocks": dict(d.blocks),
+                         "pattern": d.descriptor.pattern})
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: isinstance(x, PACK_TYPES))
+    return plan

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.core.sparsity import NMPack
 
 
@@ -94,7 +96,7 @@ def nm_spmm(x: jax.Array, pack: NMPack, *, bm: int = 128, bkc: int = 128,
         _make_kernel(n, m, bkc),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, pack.N), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
                                  pltpu.ARBITRARY)),
         interpret=interpret,

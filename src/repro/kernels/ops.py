@@ -1,4 +1,8 @@
-"""Public jit'd entry points for the sparse kernels.
+"""Low-level jit'd wrappers for the sparse kernels.
+
+NOTE: call sites outside ``kernels/`` go through ``kernels.dispatch`` —
+the registry/autotune layer — not this module.  ``ops`` remains the thin
+per-format shim the kernel unit tests exercise directly.
 
 Dispatch policy (``impl``):
   * ``"auto"``    — Pallas on TPU, Pallas-interpret on CPU when shapes are
@@ -16,7 +20,6 @@ rarely tile-aligned at small batch).
 
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax

@@ -62,7 +62,6 @@ def _conv_flops(eqn) -> float:
     out = eqn.outvars[0].aval
     rhs = eqn.invars[1].aval
     dn = eqn.params["dimension_numbers"]
-    groups = eqn.params.get("feature_group_count", 1)
     # rhs layout per dn.rhs_spec: (out_ch, in_ch/groups, *spatial)
     rs = dn.rhs_spec
     kernel_elems = math.prod(rhs.shape[i] for i in rs[2:])

@@ -36,7 +36,7 @@ import subprocess
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 from repro.launch.analysis import (hlo_collective_bytes, memory_traffic,
                                    step_flops)

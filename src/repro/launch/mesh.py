@@ -15,7 +15,7 @@ code change.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import numpy as np

@@ -16,7 +16,6 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 

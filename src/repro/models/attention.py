@@ -4,9 +4,11 @@ architectures need, behind one init/apply pair.
 Variants (config-driven): grouped-query (any H/Hk ratio incl. MQA), qk-norm
 (qwen3), sliding windows (gemma local layers), logit soft-capping (gemma2),
 M-RoPE (qwen2-vl), cross-attention (seamless decoder).  The inner product
-dispatches through ``kernels.ops.attention`` (Pallas flash kernel on TPU,
-jnp oracle elsewhere); projections dispatch through ``apply_linear`` so the
-paper's sparse formats apply to q/k/v/o like any other matmul.
+uses the inline chunked-flash jnp path below (SPMD-partitionable, cache-
+aware; ``kernels.dispatch.attention`` provides the Pallas flash kernel for
+standalone prefill shapes); projections dispatch through ``apply_linear``
+→ ``kernels.dispatch`` so the paper's sparse formats apply to q/k/v/o like
+any other matmul.
 
 KV cache layout: ``{"k": (B, S, Hk, D), "v": (B, S, Hk, D), }`` per layer —
 sequence-major so decode updates are one ``dynamic_update_slice`` and the

@@ -26,7 +26,7 @@ LM side.
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -185,7 +185,6 @@ def init_mobilenetv2(rng: Array, num_classes: int = 2, width: float = 1.0,
     cin = ch(32)
     for t, c, n, s in MBV2_PLAN:
         for i in range(n):
-            stride = s if i == 0 else 1
             cout = ch(c)
             hidden = cin * t
             blk: Params = {}

@@ -20,7 +20,7 @@ touches only cached tensors.  Sparsity applies to every projection via
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,6 @@ import jax.numpy as jnp
 from repro.models import layers as L
 from repro.models.attention import (_sdpa, attention, init_attention)
 from repro.models.config import ModelConfig
-from repro.models.transformer import mask_vocab_padding
 
 Array = jax.Array
 Params = Dict[str, Any]

@@ -38,7 +38,6 @@ from repro.models import layers as L
 from repro.models.attention import attention, init_attention
 from repro.models.config import LayerKind, ModelConfig
 from repro.models.ssm import init_mamba, init_ssm_cache, mamba_block
-from repro.models.transformer import mask_vocab_padding
 
 Array = jax.Array
 Params = Dict[str, Any]

@@ -24,7 +24,6 @@ to the sparse kernels.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -32,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models import moe as M
-from repro.models.attention import attention, init_attention, init_kv_cache
+from repro.models.attention import attention, init_attention
 from repro.models.config import LayerKind, ModelConfig
 
 Array = jax.Array

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +31,7 @@ from jax.sharding import Mesh
 
 from repro import models as MZ
 from repro.distributed import sharding as SH
+from repro.kernels import dispatch
 from repro.models.config import ModelConfig
 
 Array = jax.Array
@@ -72,7 +73,12 @@ def sample_token(logits: Array, key: Array, temperature: float) -> Array:
 def build_prefill_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
                        abstract_params: Any, abstract_cache: Any,
                        batch_shapes: Dict[str, Any]) -> Callable:
-    """(params, batch, cache) → (last_logits, cache)."""
+    """(params, batch, cache) → (last_logits, cache).
+
+    Every sparse projection inside ``MZ.prefill`` routes through
+    ``kernels.dispatch`` (via ``apply_linear``); ``Server`` records the
+    resolved kernel/mode per packed weight as ``dispatch_plan``.
+    """
     pspecs = SH.param_specs(abstract_params, cfg, mesh)
     cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
     bspecs = SH.batch_specs(batch_shapes, mesh)
@@ -90,7 +96,10 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
 
 def build_decode_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
                       abstract_params: Any, abstract_cache: Any) -> Callable:
-    """(params, token (B,), cache, pos ()) → (logits, cache)."""
+    """(params, token (B,), cache, pos ()) → (logits, cache).
+
+    Decode runs the same dispatch layer at M = slots (one token/slot).
+    """
     pspecs = SH.param_specs(abstract_params, cfg, mesh)
     cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
 
@@ -131,6 +140,11 @@ class Server:
         dummy = np.zeros((scfg.slots, scfg.prompt_pad), np.int32)
         self._batch_shapes = {"tokens": dummy}
         abstract_params = jax.eval_shape(lambda: params)
+        # kernel/mode resolved per packed weight at this server's prefill
+        # geometry (empty when the model is fully dense) — introspection
+        # only; block-size tuning happens on first compiled-path call
+        self.dispatch_plan = dispatch.plan_params(
+            params, M=scfg.slots * scfg.prompt_pad)
         self._abstract_cache = jax.eval_shape(
             lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len))
         self._prefill = build_prefill_step(

@@ -7,6 +7,22 @@ os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    # the hermetic container can't pip-install; register the deterministic
+    # fallback so the property-test modules still collect and run.  CI
+    # installs real hypothesis via `pip install -e .[test]`.
+    import importlib.util
+
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)

@@ -2,12 +2,11 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.analysis import (_parse_def, _split_computations,
                                    _trip_count, hlo_collective_bytes,
-                                   jaxpr_flops, step_flops)
+                                   step_flops)
 
 
 class TestJaxprFlops:

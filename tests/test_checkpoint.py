@@ -1,6 +1,5 @@
 """Checkpoint store: atomicity, integrity, retention, resharding."""
 
-import json
 import os
 import tempfile
 

@@ -2,11 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import encoding, pruning
-from repro.core.encoding import BLOCK, SKIP_CAP
+from repro.core.encoding import SKIP_CAP
 
 
 def rand_int7(rng, shape):

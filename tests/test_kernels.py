@@ -4,7 +4,6 @@ Every kernel × a shape/dtype grid; assert_allclose vs ref.py and vs the
 dense masked matmul ground truth.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

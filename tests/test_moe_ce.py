@@ -67,7 +67,6 @@ class TestMoE:
         assert float(jnp.abs(y0).max()) > 0
 
     def test_aux_loss_balanced_router_lower(self):
-        cfg = moe_cfg(E=4, k=1)
         T, E = 4096, 4
         logits_uniform = jnp.zeros((T, E))
         # route_topk on uniform logits → perfectly balanced? top_k breaks

@@ -1,7 +1,6 @@
 """Optimizer + trainer: masked updates, compression, microbatching,
 fault tolerance, and an end-to-end loss drop."""
 
-import os
 import tempfile
 
 import jax
@@ -168,7 +167,7 @@ class TestTrainerEndToEnd:
 
         tcfg = TrainConfig(steps=5, lr=1e-2, log_every=100)
         dcfg = DataConfig(global_batch=4, seq_len=16)
-        tr = Trainer(TINY, tcfg, mesh, dcfg, masks=masks)
+        Trainer(TINY, tcfg, mesh, dcfg, masks=masks)
 
         # run fit from the pruned params: monkey-init via manager-free path
         from repro.train.trainer import build_train_step

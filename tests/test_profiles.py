@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs as C
 from repro import models as MZ
@@ -49,7 +49,7 @@ class TestAnnotate:
 class TestDpProfile:
     def test_params_replicated_over_model(self):
         cfg = C.get("qwen3-0.6b")
-        mesh = AbstractMesh((16, 16), ("data", "model"))
+        mesh = SH.abstract_mesh((16, 16), ("data", "model"))
         ab = jax.eval_shape(lambda: MZ.init_model(jax.random.key(0), cfg))
         tp = SH.param_specs(ab, cfg, mesh, profile="tp")
         dp = SH.param_specs(ab, cfg, mesh, profile="dp")
@@ -61,7 +61,7 @@ class TestDpProfile:
         assert any("data" in str(s) for s in leaves_dp)
 
     def test_batch_extra_dp(self):
-        mesh = AbstractMesh((16, 16), ("data", "model"))
+        mesh = SH.abstract_mesh((16, 16), ("data", "model"))
         shapes = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32)}
         specs = SH.batch_specs(shapes, mesh, extra_dp=True)
         assert specs["tokens"][0] == ("data", "model")
@@ -94,7 +94,7 @@ class TestSparsifyAbstract:
 
     def test_sparse_specs_validate(self):
         cfg = C._module("qwen3-0.6b").sparse()
-        mesh = AbstractMesh((16, 16), ("data", "model"))
+        mesh = SH.abstract_mesh((16, 16), ("data", "model"))
         ab = jax.eval_shape(lambda: MZ.init_model(jax.random.key(0), cfg))
         sp = sparsify_abstract(ab, cfg)
         specs = SH.param_specs(sp, cfg, mesh)

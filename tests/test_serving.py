@@ -7,7 +7,7 @@ import pytest
 
 from repro import models as MZ
 from repro.models.config import ModelConfig
-from repro.serving import Request, ServeConfig, Server, sample_token
+from repro.serving import ServeConfig, Server, sample_token
 
 TINY = ModelConfig(name="tiny", n_layers=2, d_model=64, vocab_size=512,
                    n_heads=4, n_kv_heads=2, d_ff=128, remat=False)

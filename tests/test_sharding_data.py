@@ -2,10 +2,9 @@
 and the data pipeline."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs as C
 from repro import models as MZ
@@ -16,8 +15,8 @@ from repro.distributed import sharding as SH
 
 def abstract_mesh(multi=False):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return SH.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return SH.abstract_mesh((16, 16), ("data", "model"))
 
 
 class TestBestEffort:

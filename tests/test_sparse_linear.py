@@ -10,7 +10,6 @@ from repro.core import pruning
 from repro.core.sparse_linear import (DENSE, SparsityConfig, apply_linear,
                                       init_linear, prune_weight,
                                       sparsify_weight)
-from repro.models import layers as L
 from repro.models.config import ModelConfig
 from repro.models import transformer as TR
 

@@ -7,7 +7,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import pruning, sparsity
 from repro.core.sparse_linear import (SparsityConfig, abstract_pack,
-                                      pack_weight, prune_weight,
                                       sparsify_weight)
 
 import jax
