@@ -1,0 +1,190 @@
+"""Serving-engine benchmark: end-to-end tokens/sec and per-token latency
+for the chunked on-device decode loop vs the seed-style per-token loop.
+
+Grid: {dense, nm, combined} × slots ∈ {1, 8}.  The sparse configs pack
+the MLP weights through ``core.sparse_linear.pack_params`` so decode
+actually runs the paper's kernels through the dispatch layer (same code
+path the models use — nothing hand-wired).  For every cell we report:
+
+  * ``tok_per_s``        — chunked engine (one host sync per
+    ``decode_chunk`` steps, per-slot continuous refill);
+  * ``p50_ms`` / ``p95_ms`` — per-token latency percentiles derived from
+    the engine's per-chunk wall times;
+  * ``ref_tok_per_s``    — the seed reference: whole-wave prefill + one
+    jitted decode step and one host sync **per token**;
+  * ``speedup``          — chunked / reference throughput (the number
+    the PR's acceptance gate reads at slots=8);
+  * ``syncs``            — device→host transfers the chunked engine made
+    (the ceil(tokens/decode_chunk) contract, observable).
+
+Shapes shrink under ``REPRO_BENCH_SMOKE=1`` (the CI smoke step) so one
+pass stays in seconds.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models as MZ
+from repro.core.sparse_linear import SparsityConfig, pack_params
+from repro.models.config import ModelConfig
+from repro.serving import (ServeConfig, Server, build_decode_step,
+                           build_prefill_step, sample_token)
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+D_MODEL, D_FF, N_LAYERS = (64, 128, 2)
+MAX_NEW = 16 if SMOKE else 64
+DECODE_CHUNK = 8 if SMOKE else 16
+PROMPT_PAD = 16
+MAX_LEN = PROMPT_PAD + MAX_NEW + DECODE_CHUNK + 2
+SLOTS = (1, 8)
+VOCAB = 256
+
+SPARSITY = {
+    "dense": None,
+    "nm": SparsityConfig(format="nm", n=2, m=4, block_n=64),
+    "combined": SparsityConfig(format="combined", sparsity=0.5, n=2, m=4,
+                               block_k=64, block_n=64),
+}
+
+
+def _model(fmt: str):
+    scfg = SPARSITY[fmt]
+    cfg = ModelConfig(name=f"bench-{fmt}", n_layers=N_LAYERS,
+                      d_model=D_MODEL, vocab_size=VOCAB, n_heads=4,
+                      n_kv_heads=2, d_ff=D_FF, remat=False,
+                      mlp_sparsity=scfg or SparsityConfig())
+    params = MZ.init_model(jax.random.key(0), cfg)
+    if scfg is not None:
+        params = pack_params(params, cfg)
+    return cfg, params
+
+
+def _requests(rng, n):
+    return [rng.integers(1, VOCAB, size=int(rng.integers(4, PROMPT_PAD + 1))
+                         ).astype(np.int32) for _ in range(n)]
+
+
+def _serve_chunked(cfg, mesh, params, slots, requests):
+    scfg = ServeConfig(slots=slots, max_len=MAX_LEN, prompt_pad=PROMPT_PAD,
+                       max_new_tokens=MAX_NEW, decode_chunk=DECODE_CHUNK,
+                       temperature=0.0, eos_token=-1)
+    server = Server(cfg, mesh, scfg, params)
+    server.submit(requests[0][: PROMPT_PAD], max_new=DECODE_CHUNK + 1)
+    server.run()                                    # compile warm-up
+    server.finished.clear()
+    server.sync_count = 0
+    server.stats = {"chunk_s": [], "chunk_tokens": [], "prefills": 0}
+    for p in requests:
+        server.submit(p)
+    t0 = time.perf_counter()
+    done = server.run()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in done)
+    per_tok_ms = np.concatenate([
+        np.full(n, s / n * 1e3)
+        for s, n in zip(server.stats["chunk_s"],
+                        server.stats["chunk_tokens"]) if n]) \
+        if server.stats["chunk_tokens"] else np.zeros(1)
+    return {"tokens": toks, "tok_per_s": toks / wall,
+            "p50_ms": float(np.percentile(per_tok_ms, 50)),
+            "p95_ms": float(np.percentile(per_tok_ms, 95)),
+            "syncs": server.sync_count, "wall_s": wall}
+
+
+def _serve_per_token(cfg, mesh, params, slots, requests):
+    """The seed engine's hot path: whole-wave prefill, shared position
+    counter, ``np.asarray(tok)`` once per generated token."""
+    scfg = ServeConfig(slots=slots, max_len=MAX_LEN, prompt_pad=PROMPT_PAD,
+                       max_new_tokens=MAX_NEW, temperature=0.0, eos_token=-1)
+    abstract_params = jax.eval_shape(lambda: params)
+    abstract_cache = jax.eval_shape(
+        lambda: MZ.init_cache(cfg, slots, MAX_LEN))
+    batch_shapes = {"tokens": np.zeros((slots, PROMPT_PAD), np.int32)}
+    prefill = build_prefill_step(cfg, mesh, scfg, abstract_params,
+                                 abstract_cache, batch_shapes)
+    decode = build_decode_step(cfg, mesh, scfg, abstract_params,
+                               abstract_cache)
+    init_cache = jax.jit(lambda: MZ.init_cache(cfg, slots, MAX_LEN))
+    key = jax.random.key(0)
+
+    def run_waves(reqs):
+        toks = 0
+        queue = list(reqs)
+        with mesh:
+            while queue:
+                active, queue = queue[:slots], queue[slots:]
+                prompts = np.zeros((slots, PROMPT_PAD), np.int32)
+                for i, p in enumerate(active):
+                    L = min(len(p), PROMPT_PAD)
+                    prompts[i, PROMPT_PAD - L:] = p[-L:]
+                cache = init_cache()
+                logits, cache = prefill(params, {"tokens":
+                                                 jnp.asarray(prompts)}, cache)
+                tok = sample_token(logits[:, :cfg.vocab_size], key, 0.0)
+                pos = PROMPT_PAD
+                for t in range(MAX_NEW):
+                    np.asarray(tok)                # the per-token sync
+                    toks += len(active)
+                    if t == MAX_NEW - 1 or pos + 1 >= MAX_LEN:
+                        break
+                    logits, cache = decode(params, tok, cache,
+                                           jnp.asarray(pos))
+                    tok = sample_token(logits[:, :cfg.vocab_size], key, 0.0)
+                    pos += 1
+        return toks
+
+    run_waves(requests[:1])                         # compile warm-up
+    t0 = time.perf_counter()
+    toks = run_waves(requests)
+    wall = time.perf_counter() - t0
+    return {"tokens": toks, "tok_per_s": toks / wall, "wall_s": wall}
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rows = []
+    for fmt in SPARSITY:
+        cfg, params = _model(fmt)
+        for slots in SLOTS:
+            requests = _requests(rng, 2 * slots)
+            chunked = _serve_chunked(cfg, mesh, params, slots, requests)
+            ref = _serve_per_token(cfg, mesh, params, slots, requests)
+            rows.append({
+                "config": fmt, "slots": slots,
+                "tokens": chunked["tokens"],
+                "tok_per_s": round(chunked["tok_per_s"], 1),
+                "p50_ms": round(chunked["p50_ms"], 3),
+                "p95_ms": round(chunked["p95_ms"], 3),
+                "syncs": chunked["syncs"],
+                "ref_tok_per_s": round(ref["tok_per_s"], 1),
+                "speedup": round(chunked["tok_per_s"]
+                                 / max(ref["tok_per_s"], 1e-9), 2),
+            })
+    return {"rows": rows, "decode_chunk": DECODE_CHUNK, "max_new": MAX_NEW,
+            "backend": jax.default_backend()}
+
+
+def main(out=None) -> None:
+    if out is None:
+        out = run()
+    print(f"# serving bench — chunked loop (decode_chunk="
+          f"{out['decode_chunk']}) vs per-token loop, "
+          f"{out['backend']} backend")
+    print("config,slots,tokens,tok_per_s,p50_ms,p95_ms,syncs,"
+          "ref_tok_per_s,speedup")
+    for r in out["rows"]:
+        print(f"{r['config']},{r['slots']},{r['tokens']},"
+              f"{r['tok_per_s']},{r['p50_ms']},{r['p95_ms']},{r['syncs']},"
+              f"{r['ref_tok_per_s']},{r['speedup']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Perf-trend gate: compare a ``benchmarks.run --json`` record against the
+previous run's artifact and fail on big regressions.
+
+  python -m benchmarks.perf_trend --baseline prev/BENCH_serving.json \
+      --current BENCH_serving.json [--threshold 0.30]
+
+Per-section metrics (rows matched by key; unmatched rows are informational
+only, so grid changes don't fail the gate):
+
+  * ``kernels`` — ``us`` per kernel row (lower is better)
+  * ``serving`` — ``tok_per_s`` per (config, slots) row (higher is better)
+
+A row regresses when it is worse than baseline by more than ``threshold``
+(relative).  Missing/corrupt baseline (e.g. the first run on a branch, or
+an expired artifact) exits 0 — the gate only *blocks* when there is
+something real to compare, per the ROADMAP note: non-blocking until a
+baseline exists, blocking on >30% regressions after.
+
+Stdlib-only on purpose: CI runs it without installing the package.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# section name → (row key fields, metric, higher_is_better)
+METRICS = {
+    "kernels": (("kernel",), "us", False),
+    "serving": (("config", "slots"), "tok_per_s", True),
+}
+
+
+def _rows(record: dict, section: str):
+    data = record.get("sections", {}).get(section, {}).get("data") or {}
+    out = {}
+    keys, metric, _ = METRICS[section]
+    for row in data.get("rows", []):
+        try:
+            out[tuple(row[k] for k in keys)] = float(row[metric])
+        except (KeyError, TypeError, ValueError):
+            continue
+    return out
+
+
+def compare(baseline: dict, current: dict, threshold: float):
+    """Returns (report_lines, regressions)."""
+    lines, regressions = [], []
+    for section, (_, metric, higher_better) in METRICS.items():
+        base, cur = _rows(baseline, section), _rows(current, section)
+        for key in sorted(cur, key=str):
+            if key not in base:
+                lines.append(f"  {section} {key}: {metric}={cur[key]:g} "
+                             "(new row, no baseline)")
+                continue
+            b, c = base[key], cur[key]
+            if b <= 0:
+                continue
+            change = (c - b) / b
+            worse = -change if higher_better else change
+            flag = "REGRESSION" if worse > threshold else "ok"
+            lines.append(f"  {section} {key}: {metric} {b:g} -> {c:g} "
+                         f"({change:+.1%}) {flag}")
+            if worse > threshold:
+                regressions.append((section, key, b, c))
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--threshold", type=float, default=0.30)
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"no usable baseline ({e}) — trend check skipped")
+        return 0
+    try:
+        with open(args.current) as f:
+            current = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"cannot read current record {args.current}: {e}",
+              file=sys.stderr)
+        return 2
+
+    lines, regressions = compare(baseline, current, args.threshold)
+    print(f"perf trend vs {args.baseline} "
+          f"(threshold {args.threshold:.0%}):")
+    for ln in lines:
+        print(ln)
+    if regressions:
+        print(f"{len(regressions)} row(s) regressed by more than "
+              f"{args.threshold:.0%}")
+        return 1
+    print("no regression beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

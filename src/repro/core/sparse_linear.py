@@ -116,6 +116,86 @@ def sparsify_weight(w: Array, cfg: SparsityConfig):
     return pack_weight(pruned, cfg)
 
 
+def _family_sparsity(names, cfg: Any) -> Optional[SparsityConfig]:
+    """Name-based rule: which per-family SparsityConfig governs a weight.
+
+    Shared by :func:`pack_params` (concrete offline packing) and
+    :func:`sparsify_abstract` (dry-run abstract packs) so the two can
+    never disagree about what gets packed.  ``cfg`` is the model config
+    (duck-typed: ``mlp_sparsity`` / ``attn_sparsity`` /
+    ``expert_sparsity``).
+    """
+    if any(n in ("w_in", "w_gate", "w_out") for n in names):
+        moe = "moe" in names and "shared" not in names
+        return cfg.expert_sparsity if moe else cfg.mlp_sparsity
+    if any(n in ("in_proj", "out_proj") for n in names):
+        return cfg.mlp_sparsity
+    if any(n in ("wq", "wk", "wv", "wo") for n in names):
+        return cfg.attn_sparsity
+    return None
+
+
+def _geometry_ok(K: int, N: int, scfg: SparsityConfig) -> bool:
+    """Every dim the pack format assumes must divide."""
+    if scfg.format in ("nm", "combined") and (K % scfg.m or
+                                              N % scfg.block_n):
+        return False
+    if scfg.format in ("block", "combined") and K % scfg.block_k:
+        return False
+    return True
+
+
+def _pack_stacked(w: Array, scfg: SparsityConfig):
+    """prune + pack a weight with optional stacked leading axes.
+
+    Layer-scan / expert stacks carry leading axes on every leaf; the pack
+    is built per 2D slice and its array leaves re-stacked (static
+    geometry describes the slice, matching how ``lax.scan`` slices it
+    in-model).  block/combined packs are padded to a uniform ``max_nnz``
+    across slices so the stack is rectangular.
+    """
+    lead = w.shape[:-2]
+    if not lead:
+        return sparsify_weight(w, scfg)
+    flat = w.reshape((-1,) + w.shape[-2:])
+    pruned = [prune_weight(s, scfg)[0] for s in flat]
+    if scfg.format in ("block", "combined"):
+        pad = max(pack_weight(p, scfg).max_nnz for p in pruned)
+        packs = [pack_weight(p, scfg, pad_to=pad) for p in pruned]
+    else:
+        packs = [pack_weight(p, scfg) for p in pruned]
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *packs)
+    if len(lead) > 1:
+        stacked = jax.tree.map(lambda a: a.reshape(lead + a.shape[1:]),
+                               stacked)
+    return stacked
+
+
+def pack_params(params: Any, cfg: Any) -> Any:
+    """Offline prune+pack of a whole param pytree (lifecycle steps 2+3).
+
+    ``cfg`` is the model config (duck-typed: only ``mlp_sparsity`` /
+    ``attn_sparsity`` / ``expert_sparsity`` are read).  The same
+    name-based rules as :func:`sparsify_abstract` pick the per-family
+    :class:`SparsityConfig`; weights whose geometry doesn't divide the
+    pack tiling stay dense.  The result serves directly: ``apply_linear``
+    dispatches on the packed types, so a packed model runs the paper's
+    sparse kernels with no model-code changes.
+    """
+
+    def rule(path, leaf):
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        scfg = _family_sparsity(names, cfg)
+        if scfg is None or scfg.format == "dense" or leaf.ndim < 2:
+            return leaf
+        K, N = leaf.shape[-2:]
+        if not _geometry_ok(K, N, scfg):
+            return leaf
+        return _pack_stacked(leaf, scfg)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
 # ---------------------------------------------------------------------------
 # Abstract (ShapeDtypeStruct) packs for the dry-run
 # ---------------------------------------------------------------------------
@@ -174,32 +254,14 @@ def sparsify_abstract(abstract_params, cfg) -> Any:
     """
     import jax
 
-    def names_of(path):
-        out = []
-        for p in path:
-            if hasattr(p, "key"):
-                out.append(str(p.key))
-        return out
-
     def rule(path, leaf):
-        names = names_of(path)
-        scfg = None
-        if any(n in ("w_in", "w_gate", "w_out") for n in names):
-            moe = "moe" in names and "shared" not in names
-            scfg = cfg.expert_sparsity if moe else cfg.mlp_sparsity
-        elif any(n in ("in_proj", "out_proj") for n in names):
-            scfg = cfg.mlp_sparsity
-        elif any(n in ("wq", "wk", "wv", "wo") for n in names):
-            scfg = cfg.attn_sparsity
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        scfg = _family_sparsity(names, cfg)
         if scfg is None or scfg.format == "dense" or leaf.ndim < 2:
             return leaf
         lead = leaf.shape[:-2]
         K, N = leaf.shape[-2:]
-        # geometry guards: every dim the pack assumes must divide
-        if scfg.format in ("nm", "combined") and (K % scfg.m or
-                                                  N % scfg.block_n):
-            return leaf
-        if scfg.format in ("block", "combined") and K % scfg.block_k:
+        if not _geometry_ok(K, N, scfg):
             return leaf
         try:
             pack = abstract_pack(K, N, scfg, dtype=leaf.dtype)

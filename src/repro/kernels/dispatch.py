@@ -263,8 +263,17 @@ def registry() -> Dict[str, KernelEntry]:
 
 
 def _bm_candidates(M: int) -> List[int]:
-    out = [bm for bm in (64, 128, 256) if bm <= max(M, 64)]
-    return out or [64]
+    """Row-tile sweep points covering both serving phases.
+
+    Prefill runs MXU-shaped M (≥ 64: the 64/128/256 ladder); decode runs
+    M = slots (1–32 rows), where a 64-row tile pads 8–64× dead rows — so
+    small-M geometries add matching small tiles to the grid and the
+    autotune cache ends up holding rows for both phases.
+    """
+    if M < 64:
+        out = [bm for bm in (8, 16, 32) if bm <= max(M, 8)]
+        return out + [64]
+    return [bm for bm in (64, 128, 256) if bm <= M]
 
 
 def _bkc_for(desc: SparsityDescriptor, cap: int = 128) -> int:
@@ -361,11 +370,27 @@ def _lookahead_run(x, pack, mode, blocks):
     return out[:M]
 
 
+def _lookahead_candidates(desc, M):
+    # full bm × bk × bn sweep (ROADMAP: widen beyond the bm-only grid);
+    # 128 leads each axis so the pre-sweep default stays the MXU tile
+    cands = []
+    for bm in _bm_candidates(M):
+        for bk in (128, 64, 256):
+            if bk > desc.K:
+                continue
+            for bn in (128, 64, 256):
+                if bn > desc.N:
+                    continue
+                cands.append({"bm": bm, "bk": bk, "bn": bn})
+    return cands or [{"bm": _bm_candidates(M)[0],
+                      "bk": min(128, desc.K), "bn": min(128, desc.N)}]
+
+
 register(KernelEntry(
     name="lookahead_decode", kind="lookahead",
     supports=lambda d, M: True,
     run=_lookahead_run,
-    candidates=lambda d, M: [{"bm": bm} for bm in _bm_candidates(M)]))
+    candidates=_lookahead_candidates))
 
 
 def _dense_run(x, w, mode, blocks):
@@ -454,10 +479,15 @@ def _blocks_for(entry: KernelEntry, desc: SparsityDescriptor, M: int,
 
 
 def _default_blocks(cands: List[dict], M: int) -> Dict[str, int]:
-    # prefer the 128-row tile (MXU-shaped) when present, else first listed
+    # prefer the 128-row tile (MXU-shaped) when present; otherwise the
+    # largest tile that doesn't pad past M (decode-shaped geometries),
+    # else first listed
     for c in cands:
         if c.get("bm", 128) == 128:
             return dict(c)
+    fitting = [c for c in cands if c.get("bm", 1) <= max(M, 8)]
+    if fitting:
+        return dict(max(fitting, key=lambda c: c.get("bm", 1)))
     return dict(cands[0]) if cands else {}
 
 
@@ -573,9 +603,10 @@ def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 
 def plan_params(params: Any, M: int = 128, impl: str = "auto") -> List[dict]:
     """Walk a param pytree and record the dispatch decision for every
-    packed weight — the serving engine calls this at build time so the
-    kernel/mode selection (and any autotune misses) is visible before the
-    first request, not during it."""
+    packed weight — the serving engine calls this at build time, once per
+    phase geometry (``M = prompt_pad`` rows for prefill, ``M = slots``
+    for decode), so the kernel/mode/block selection (and any autotune
+    misses) is visible before the first request, not during it."""
     plan: List[dict] = []
 
     def visit(path, leaf):
@@ -583,8 +614,8 @@ def plan_params(params: Any, M: int = 128, impl: str = "auto") -> List[dict]:
             name = "/".join(str(getattr(p, "key", getattr(p, "idx", "?")))
                             for p in path)
             d = select(leaf, M=M, impl=impl)
-            plan.append({"param": name, "kernel": d.kernel, "mode": d.mode,
-                         "blocks": dict(d.blocks),
+            plan.append({"param": name, "M": M, "kernel": d.kernel,
+                         "mode": d.mode, "blocks": dict(d.blocks),
                          "pattern": d.descriptor.pattern})
         return leaf
 

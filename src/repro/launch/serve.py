@@ -29,6 +29,8 @@ def main() -> int:
     ap.add_argument("--prompt-pad", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--decode-chunk", type=int, default=16,
+                    help="on-device decode steps per host sync")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -60,6 +62,7 @@ def main() -> int:
     scfg = ServeConfig(slots=args.slots, max_len=args.max_len,
                        prompt_pad=args.prompt_pad,
                        max_new_tokens=args.max_new,
+                       decode_chunk=args.decode_chunk,
                        temperature=args.temperature, seed=args.seed)
     server = Server(cfg, mesh, scfg, params)
 
@@ -77,6 +80,9 @@ def main() -> int:
         "arch": cfg.name, "requests": len(done),
         "generated_tokens": toks, "wall_s": round(dt, 2),
         "tok_per_s": round(toks / dt, 1),
+        "decode_chunk": scfg.decode_chunk,
+        "host_syncs": server.sync_count,
+        "prefills": server.stats["prefills"],
     }))
     return 0
 

@@ -110,10 +110,39 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Array],
 
 def decode_step(params: Params, cfg: ModelConfig, token: Array,
                 cache: Params, pos: Array) -> Tuple[Array, Params]:
-    """One token in, next-token logits + updated cache out."""
+    """One token in, next-token logits + updated cache out.
+
+    ``pos`` is either a scalar (all sequences share one write offset —
+    the wave-decode posture) or a ``(B,)`` vector of *per-slot* positions
+    (continuous batching: each slot advances independently; rope, the
+    cache write and the kv-length mask all follow the per-slot value).
+    """
     f = family(cfg)
     if f == "encdec":
         return ED.encdec_decode_step(params, cfg, token, cache, pos)
     if f == "hybrid":
         return HY.hybrid_decode_step(params, cfg, token, cache, pos)
     return TR.lm_decode_step(params, cfg, token, cache, pos)
+
+
+def blank_slot_cache(cache: Params, batch: int = 1) -> Params:
+    """A zeroed copy of ``cache`` with the batch axis (axis 1 on every
+    leaf) shrunk to ``batch`` — the scratch cache a per-slot prefill
+    fills before :func:`merge_cache_slot` writes it into the shared one."""
+    return jax.tree.map(
+        lambda l: jnp.zeros(l.shape[:1] + (batch,) + l.shape[2:], l.dtype),
+        cache)
+
+
+def merge_cache_slot(cache: Params, slot_cache: Params, slot: Array) -> Params:
+    """Write a batch-1 cache into slot ``slot`` of a shared cache.
+
+    Every cache leaf across all families carries batch on axis 1
+    (KV: (nl, B, S, Hk, D); SSM conv/state: (nl, B, ...); encdec
+    self/cross: (nl, B, S, Hk, D)), so the merge is one
+    ``dynamic_update_slice_in_dim`` per leaf — the cache-side half of
+    per-slot prefill (continuous refill without draining the batch).
+    """
+    return jax.tree.map(
+        lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+            full, one.astype(full.dtype), slot, axis=1), cache, slot_cache)

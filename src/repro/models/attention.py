@@ -76,22 +76,38 @@ def _project_qkv(params: Params, cfg: ModelConfig, x: Array,
 
 def _mask(cfg: ModelConfig, qpos: Array, kpos: Array, *, causal: bool,
           window: Optional[int], is_local, kv_len) -> Array:
-    """(Lq, Lk) bool reachability mask.  ``is_local`` may be a *traced*
+    """(..., Lq, Lk) bool reachability mask.  ``is_local`` may be a *traced*
     bool (scanned heterogeneous local/global stacks select the window mask
-    at run time — both masks are elementwise-cheap)."""
-    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    at run time — both masks are elementwise-cheap).
+
+    ``qpos`` is (Lq,) or (B, Lq) and ``kv_len`` None / scalar / (B,) —
+    the batched forms carry per-slot decode positions (continuous
+    batching), broadcasting a leading batch axis onto the mask.
+    """
+    q = qpos[..., :, None]                       # (..., Lq, 1)
+    mask = jnp.ones(q.shape[:-1] + (kpos.shape[0],), bool)
     if causal:
-        mask &= kpos[None, :] <= qpos[:, None]
+        mask &= kpos <= q
     if window is not None:
-        wmask = kpos[None, :] > qpos[:, None] - window
+        wmask = kpos > q - window
         if isinstance(is_local, bool):
             if is_local:
                 mask &= wmask
         else:
             mask &= wmask | ~is_local
     if kv_len is not None:
-        mask &= kpos[None, :] < kv_len
+        kvl = jnp.asarray(kv_len)
+        if kvl.ndim == 1:                        # per-slot valid lengths
+            kvl = kvl[:, None, None]
+        mask &= kpos < kvl
     return mask
+
+
+def _expand_mask(mask: Array) -> Array:
+    """Broadcast a (Lq, Lk) or (B, Lq, Lk) mask onto (B, Hk, g, Lq, Lk)."""
+    if mask.ndim == 2:
+        return mask[None, None, None]
+    return mask[:, None, None]
 
 
 def _sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array, *,
@@ -111,7 +127,10 @@ def _sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array, *,
     kh = k.transpose(0, 2, 1, 3).astype(jnp.float32)   # (B, Hk, Lk, D)
     vh = v.transpose(0, 2, 1, 3).astype(jnp.float32)
     if kv_len is not None:
-        qpos = kv_len - Lq + jnp.arange(Lq)            # abs position of queries
+        kvl = jnp.asarray(kv_len)
+        # abs position of queries; (Lq,) for scalar kv_len, (B, Lq) when
+        # kv_len is per-slot (vector cache_pos decode)
+        qpos = (kvl[:, None] if kvl.ndim == 1 else kvl) - Lq + jnp.arange(Lq)
     else:
         qpos = jnp.arange(Lq) + (Lk - Lq)
     scale = D ** -0.5
@@ -122,9 +141,10 @@ def _sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array, *,
         logits = jnp.einsum("bhgqd,bhkd->bhgqk", qh, kh) * scale
         if cfg.attn_softcap is not None:
             logits = jnp.tanh(logits / cfg.attn_softcap) * cfg.attn_softcap
-        mask = _mask(cfg, qpos, kpos, causal=causal, window=window,
-                     is_local=is_local, kv_len=kv_len)
-        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        mask = _expand_mask(_mask(cfg, qpos, kpos, causal=causal,
+                                  window=window, is_local=is_local,
+                                  kv_len=kv_len))
+        logits = jnp.where(mask, logits, -1e30)
         p = jax.nn.softmax(logits, axis=-1)
         out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vh)
     else:
@@ -138,7 +158,10 @@ def _sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array, *,
         kc_ = kh.reshape(B, Hk, nc, chunk, D).transpose(2, 0, 1, 3, 4)
         vc_ = vh.reshape(B, Hk, nc, chunk, D).transpose(2, 0, 1, 3, 4)
         qcs = qh.reshape(B, Hk, g, nq, qc, D).transpose(3, 0, 1, 2, 4, 5)
-        qpos_c = qpos.reshape(nq, qc)
+        if qpos.ndim == 2:          # per-slot positions: (B, Lq) → (nq, B, qc)
+            qpos_c = qpos.reshape(B, nq, qc).transpose(1, 0, 2)
+        else:
+            qpos_c = qpos.reshape(nq, qc)
 
         def q_block(args):
             qb, qp = args                       # (B,Hk,g,qc,D), (qc,)
@@ -150,13 +173,14 @@ def _sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array, *,
                 s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb) * scale
                 if cfg.attn_softcap is not None:
                     s = jnp.tanh(s / cfg.attn_softcap) * cfg.attn_softcap
-                mask = _mask(cfg, qp, kpos, causal=causal, window=window,
-                             is_local=is_local, kv_len=kv_len)
-                s = jnp.where(mask[None, None, None], s, -1e30)
+                mask = _expand_mask(
+                    _mask(cfg, qp, kpos, causal=causal, window=window,
+                          is_local=is_local, kv_len=kv_len))
+                s = jnp.where(mask, s, -1e30)
                 m_new = jnp.maximum(m_run,
                                     jnp.max(s, axis=-1, keepdims=True))
                 p = jnp.exp(s - m_new)
-                p = jnp.where(mask[None, None, None], p, 0.0)
+                p = jnp.where(mask, p, 0.0)
                 alpha = jnp.exp(m_run - m_new)
                 l_new = l_run * alpha + jnp.sum(p, -1, keepdims=True)
                 acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
@@ -236,14 +260,24 @@ def attention(params: Params, cfg: ModelConfig, x: Array, positions: Array,
     new_cache = None
     kv_len = None
     if cache is not None:
-        # write the new k/v at cache_pos, attend over the whole cache
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        # write the new k/v at cache_pos, attend over the whole cache.
+        # cache_pos may be a scalar (shared write offset: prefill, wave
+        # decode) or a (B,) vector of per-slot positions (continuous
+        # batching: each slot advances independently).
+        cp = jnp.asarray(cache_pos)
+        if cp.ndim == 1:
+            def _upd(c, n, p):          # (S, Hk, D), (Lq, Hk, D), ()
+                return jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
+            ck = jax.vmap(_upd)(cache["k"], k.astype(cache["k"].dtype), cp)
+            cv = jax.vmap(_upd)(cache["v"], v.astype(cache["v"].dtype), cp)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
         new_cache = {"k": ck, "v": cv}
         k, v = ck, cv
-        kv_len = cache_pos + x.shape[1]
+        kv_len = cp + x.shape[1]
 
     out = _sdpa(cfg, q, k, v, causal=causal, window=window,
                 is_local=is_local, kv_len=kv_len)

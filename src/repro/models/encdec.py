@@ -214,7 +214,9 @@ def _dec_cached(params: Params, cfg: ModelConfig, tokens: Array,
                 last_only: bool = False) -> Tuple[Array, Params]:
     B, Lt = tokens.shape
     x = L.embed(params["embed"], tokens, scale=cfg.embed_scale)
-    positions = jnp.broadcast_to(jnp.arange(Lt) + cache_pos, (B, Lt))
+    cp = jnp.asarray(cache_pos)
+    base = jnp.arange(Lt)[None, :] + (cp[:, None] if cp.ndim == 1 else cp)
+    positions = jnp.broadcast_to(base, (B, Lt))
 
     def body(x, xs):
         p_layer, self_c, ck, cv = xs

@@ -159,7 +159,9 @@ def hybrid_hidden(params: Params, cfg: ModelConfig, inputs: Array,
     if positions is None:
         base = jnp.arange(Lq)
         if cache_pos is not None:
-            base = base + cache_pos
+            cp = jnp.asarray(cache_pos)
+            # scalar offset (shared) or (B,) per-slot decode positions
+            base = base[None, :] + (cp[:, None] if cp.ndim == 1 else cp)
         positions = jnp.broadcast_to(base, (B, Lq))
 
     remat = cfg.remat and cache is None

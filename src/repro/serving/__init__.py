@@ -1,3 +1,4 @@
 from repro.serving.engine import (  # noqa: F401
-    Request, ServeConfig, Server, build_decode_step, build_prefill_step,
+    Request, ServeConfig, Server, build_decode_loop, build_decode_step,
+    build_prefill_slot_step, build_prefill_step, init_decode_state,
     sample_token)

@@ -1,19 +1,36 @@
-"""Batched serving: prefill + decode steps and a slot-based scheduler.
+"""Batched serving: chunked on-device decode + true continuous batching.
 
-The two jitted steps are exactly what the dry-run's ``prefill_*`` /
-``decode_*`` / ``long_*`` cells lower:
+Three jitted programs make up the hot path:
 
-  * ``build_prefill_step`` — prompt (B, L) → last logits + filled cache;
-  * ``build_decode_step``  — one token per sequence against the cache
-    (`serve_step` in the assignment's terms), with per-slot positions so
-    heterogeneous-length sequences batch together.
+  * ``build_prefill_slot_step`` — prefill ONE request (1, prompt_pad) into
+    slot ``i`` of the shared cache and stamp the slot's decode state
+    (first token, position, budget) on-device.  Refill never drains the
+    batch: other slots keep their cache rows and positions.
+  * ``build_decode_loop`` — the tentpole: a ``lax.scan`` that runs
+    ``decode_chunk`` decode+sample steps fully on-device.  The scan carry
+    holds the whole per-slot decode state — token, position, done mask,
+    remaining budget — plus the PRNG key; EOS, budget exhaustion and the
+    cache-capacity limit are all detected inside the scan.  The host sees
+    one ``(decode_chunk, slots)`` token block per call: **one
+    device→host sync per chunk**, not one per token.
+  * ``build_prefill_step`` / ``build_decode_step`` — the wave-style whole
+    -batch steps, kept for the dry-run's ``prefill_*`` / ``decode_*``
+    cells and as the 1-token reference the benchmarks compare against.
 
-``Server`` adds continuous batching over fixed slots: requests queue up,
-free slots are prefilled (one jitted shape: the prompt pad length), decode
-advances every active slot each step, finished slots free immediately and
-are refilled without draining the batch — the vLLM-style loop reduced to
-its JAX-native core.  Slot state (cache) lives sharded on the mesh; only
-tokens cross the host boundary each step.
+``Server`` schedules requests over fixed slots: free slots are refilled
+one at a time between chunks (per-slot prefill), every slot carries its
+own position counter, and ``init_cache`` is jitted once at build time.
+The dispatch layer is re-planned per phase — ``prefill_plan`` at both
+prefill geometries (``M = slots*prompt_pad`` for the wave path,
+``M = prompt_pad`` for per-slot refill) and ``decode_plan`` at
+``M = slots`` (one token per slot) — so kernel selection and autotuned
+block sizes match the geometry each phase actually runs.
+
+Sync contract: during decode the engine performs exactly
+``ceil(tokens_emitted / decode_chunk)`` device→host transfers per slot
+wave (all through :func:`_device_fetch`, which tests monkeypatch to
+count); per-slot prefill performs none — the first sampled token rides
+back in the next chunk's block.
 
 Sampling: greedy or temperature; fully deterministic given the seed.
 """
@@ -22,12 +39,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import models as MZ
 from repro.distributed import sharding as SH
@@ -43,6 +61,7 @@ class ServeConfig:
     max_len: int = 1024             # cache capacity
     prompt_pad: int = 128           # prompts are padded to this length
     max_new_tokens: int = 64
+    decode_chunk: int = 16          # on-device decode steps per host sync
     temperature: float = 0.0        # 0 → greedy
     eos_token: int = 1
     kv_mode: str = "auto"           # sharding of the KV cache
@@ -66,6 +85,16 @@ def sample_token(logits: Array, key: Array, temperature: float) -> Array:
         key, logits / temperature, axis=-1).astype(jnp.int32)
 
 
+def _device_fetch(tree: Any) -> Any:
+    """The engine's single device→host transfer point.
+
+    Every token/state readback in ``Server.run`` goes through here, so
+    tests can monkeypatch it to count syncs and assert the
+    one-sync-per-chunk contract.
+    """
+    return jax.device_get(tree)
+
+
 # ---------------------------------------------------------------------------
 # Jitted steps
 # ---------------------------------------------------------------------------
@@ -75,9 +104,9 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
                        batch_shapes: Dict[str, Any]) -> Callable:
     """(params, batch, cache) → (last_logits, cache).
 
-    Every sparse projection inside ``MZ.prefill`` routes through
-    ``kernels.dispatch`` (via ``apply_linear``); ``Server`` records the
-    resolved kernel/mode per packed weight as ``dispatch_plan``.
+    Whole-batch wave prefill — what the dry-run's ``prefill_*`` cells
+    lower.  ``Server`` itself prefills per slot (see
+    ``build_prefill_slot_step``).
     """
     pspecs = SH.param_specs(abstract_params, cfg, mesh)
     cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
@@ -96,9 +125,11 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
 
 def build_decode_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
                       abstract_params: Any, abstract_cache: Any) -> Callable:
-    """(params, token (B,), cache, pos ()) → (logits, cache).
+    """(params, token (B,), cache, pos () or (B,)) → (logits, cache).
 
-    Decode runs the same dispatch layer at M = slots (one token/slot).
+    One decode step; the per-token loop the benchmarks use as the seed
+    reference.  ``pos`` may be per-slot (vector) — the model layer
+    handles both.
     """
     pspecs = SH.param_specs(abstract_params, cfg, mesh)
     cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
@@ -114,6 +145,161 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
         donate_argnums=(2,))
 
 
+def build_prefill_slot_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                            abstract_params: Any, abstract_cache: Any
+                            ) -> Callable:
+    """(params, tokens (1, P), cache, state, slot, budget, key)
+    → (cache, state).
+
+    Prefills one request into a fresh batch-1 scratch cache, merges it
+    into slot ``slot`` of the shared cache, samples the first token from
+    the prompt logits and stamps the slot's decode state — all on-device
+    (the first token is emitted by the next decode chunk, so refill
+    costs zero host syncs).  ``slot`` is a traced scalar: one compile
+    serves every slot.
+    """
+    pspecs = SH.param_specs(abstract_params, cfg, mesh)
+    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
+    bspecs = SH.batch_specs(
+        {"tokens": jax.ShapeDtypeStruct((1, scfg.prompt_pad), jnp.int32)},
+        mesh)
+
+    def step(params, batch, cache, state, slot, budget, key):
+        scratch = MZ.blank_slot_cache(cache)
+        logits, scratch = MZ.prefill(params, cfg, batch, scratch)
+        cache = MZ.merge_cache_slot(cache, scratch, slot)
+        first = sample_token(logits[:, :cfg.vocab_size], key,
+                             scfg.temperature)[0]
+        state = {
+            "tok": state["tok"].at[slot].set(first),
+            "pos": state["pos"].at[slot].set(scfg.prompt_pad),
+            "done": state["done"].at[slot].set(False),
+            "left": state["left"].at[slot].set(budget),
+        }
+        return cache, state
+
+    sspecs = _state_shardings(mesh)
+    return jax.jit(
+        step,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, bspecs),
+                      SH.named(mesh, cspecs), sspecs, None, None, None),
+        out_shardings=(SH.named(mesh, cspecs), sspecs),
+        donate_argnums=(2, 3))
+
+
+def build_prefill_wave_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                            abstract_params: Any, abstract_cache: Any
+                            ) -> Callable:
+    """(params, tokens (slots, P), cache, valid, budgets, key)
+    → (cache, state).
+
+    The cold-start / wave-boundary fast path: when EVERY slot is free the
+    whole batch prefills in one call (per-slot prefill would pay ``slots``
+    jit dispatches for the same rows) and the decode state is rebuilt
+    wholesale — ``valid`` masks slots that actually received a request.
+    Never used while any slot is live: whole-batch prefill rewrites every
+    slot's cache rows.
+    """
+    pspecs = SH.param_specs(abstract_params, cfg, mesh)
+    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
+    bspecs = SH.batch_specs(
+        {"tokens": jax.ShapeDtypeStruct((scfg.slots, scfg.prompt_pad),
+                                        jnp.int32)}, mesh)
+    sspecs = _state_shardings(mesh)
+
+    def step(params, batch, cache, valid, budgets, key):
+        logits, cache = MZ.prefill(params, cfg, batch, cache)
+        first = sample_token(logits[:, :cfg.vocab_size], key,
+                             scfg.temperature)
+        state = {
+            "tok": jnp.where(valid, first, 0),
+            "pos": jnp.where(valid, scfg.prompt_pad, 0).astype(jnp.int32),
+            "done": ~valid,
+            "left": jnp.where(valid, budgets, 0),
+        }
+        return cache, state
+
+    return jax.jit(
+        step,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, bspecs),
+                      SH.named(mesh, cspecs), None, None, None),
+        out_shardings=(SH.named(mesh, cspecs), sspecs),
+        donate_argnums=(2,))
+
+
+def init_decode_state(slots: int) -> Dict[str, Array]:
+    """All-free decode state: every slot done, no budget, pos 0."""
+    return {
+        "tok": jnp.zeros((slots,), jnp.int32),
+        "pos": jnp.zeros((slots,), jnp.int32),
+        "done": jnp.ones((slots,), bool),
+        "left": jnp.zeros((slots,), jnp.int32),
+    }
+
+
+def _state_shardings(mesh: Mesh) -> Dict[str, NamedSharding]:
+    """Replicated shardings for the per-slot decode state.
+
+    Explicit (not ``None``/unspecified) so the first call — whose state
+    comes fresh off the host — and every later call — whose state is a
+    committed device output — hit the SAME compiled executable instead
+    of forking a second variant mid-serve."""
+    return {k: NamedSharding(mesh, P())
+            for k in ("tok", "pos", "done", "left")}
+
+
+def build_decode_loop(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                      abstract_params: Any, abstract_cache: Any) -> Callable:
+    """(params, cache, state, key) → (cache, state, tokens, emitted).
+
+    Runs ``scfg.decode_chunk`` decode+sample steps on-device in one
+    ``lax.scan``.  Each step first *emits* the carry token (the one
+    sampled last step — or by the slot's prefill), then decides whether
+    the slot is finished (EOS, budget, or cache capacity) and, if not,
+    decodes+samples the next token at the slot's own position.  Finished
+    and free slots ride along masked: their state is frozen and their
+    (idempotent) cache writes land on rows nothing attends to.
+
+    Returns the new cache/state plus ``tokens``/``emitted`` blocks of
+    shape ``(decode_chunk, slots)`` — the single host transfer per chunk.
+    """
+    pspecs = SH.param_specs(abstract_params, cfg, mesh)
+    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
+    V = cfg.vocab_size
+
+    def loop(params, cache, state, key):
+        def body(carry, _):
+            cache, st, key = carry
+            tok, pos = st["tok"], st["pos"]
+            done, left = st["done"], st["left"]
+            emit = (~done) & (left > 0)
+            left = left - emit.astype(left.dtype)
+            # the slot is finished once the emitted token is EOS, the
+            # budget is spent, or the cache can't hold another row
+            done = done | (emit & ((tok == scfg.eos_token) | (left == 0)
+                                   | (pos + 1 >= scfg.max_len)))
+            logits, cache = MZ.decode_step(params, cfg, tok, cache, pos)
+            key, sk = jax.random.split(key)
+            nxt = sample_token(logits[:, :V], sk, scfg.temperature)
+            alive = ~done
+            st = {"tok": jnp.where(alive, nxt, tok),
+                  "pos": jnp.where(alive, pos + 1, pos),
+                  "done": done, "left": left}
+            return (cache, st, key), (tok, emit)
+
+        (cache, state, _), (tokens, emitted) = jax.lax.scan(
+            body, (cache, state, key), None, length=scfg.decode_chunk)
+        return cache, state, tokens, emitted
+
+    sspecs = _state_shardings(mesh)
+    return jax.jit(
+        loop,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, cspecs),
+                      sspecs, None),
+        out_shardings=(SH.named(mesh, cspecs), sspecs, None, None),
+        donate_argnums=(1, 2))
+
+
 # ---------------------------------------------------------------------------
 # Scheduler
 # ---------------------------------------------------------------------------
@@ -121,11 +307,15 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
 class Server:
     """Slot-based continuous batching on one mesh.
 
-    Simplification vs a production engine (recorded): all slots share one
-    decode position counter (the cache write offset); per-slot validity is
-    tracked host-side and finished slots are refilled at the next prefill
-    boundary.  Padding tokens in refilled slots attend harmlessly within
-    their own sequence (cache is overwritten on refill).
+    Every slot carries its own position counter, done mask and token
+    budget — all device-resident between host syncs.  Finished slots are
+    refilled at the next chunk boundary by a per-slot prefill that
+    writes only that slot's cache rows; in-flight slots never stall.
+
+    ``stats`` records per-chunk wall time and emitted-token counts (the
+    serving benchmark derives per-token latency percentiles from them);
+    ``sync_count`` counts device→host transfers (the one-per-chunk
+    contract).
     """
 
     def __init__(self, cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
@@ -136,21 +326,35 @@ class Server:
         self.finished: List[Request] = []
         self._uid = itertools.count()
         self._key = jax.random.key(scfg.seed)
+        self.sync_count = 0
+        self.stats: Dict[str, List] = {"chunk_s": [], "chunk_tokens": [],
+                                       "prefills": 0}
 
-        dummy = np.zeros((scfg.slots, scfg.prompt_pad), np.int32)
-        self._batch_shapes = {"tokens": dummy}
         abstract_params = jax.eval_shape(lambda: params)
-        # kernel/mode resolved per packed weight at this server's prefill
-        # geometry (empty when the model is fully dense) — introspection
-        # only; block-size tuning happens on first compiled-path call
-        self.dispatch_plan = dispatch.plan_params(
-            params, M=scfg.slots * scfg.prompt_pad)
+        # kernel/mode/blocks resolved per packed weight at each phase's
+        # real geometry (apply_linear flattens leading dims into M):
+        # wave prefill runs M = slots*prompt_pad, per-slot refill
+        # M = prompt_pad (entries carry their M), decode one token per
+        # slot (M = slots) — the dispatch layer re-plans per decode
+        # batch size instead of assuming prefill M.
+        self.prefill_plan = (
+            dispatch.plan_params(params, M=scfg.slots * scfg.prompt_pad)
+            + dispatch.plan_params(params, M=scfg.prompt_pad))
+        self.decode_plan = dispatch.plan_params(params, M=scfg.slots)
+        self.dispatch_plan = self.prefill_plan          # back-compat alias
         self._abstract_cache = jax.eval_shape(
             lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len))
-        self._prefill = build_prefill_step(
-            cfg, mesh, scfg, abstract_params, self._abstract_cache,
-            self._batch_shapes)
-        self._decode = build_decode_step(
+        cspecs = SH.cache_specs(self._abstract_cache, cfg, mesh,
+                                kv_mode=scfg.kv_mode)
+        # hoisted: jitted once here, not per wave inside the serve loop
+        self._init_cache = jax.jit(
+            lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len),
+            out_shardings=SH.named(mesh, cspecs))
+        self._prefill_slot = build_prefill_slot_step(
+            cfg, mesh, scfg, abstract_params, self._abstract_cache)
+        self._prefill_wave = build_prefill_wave_step(
+            cfg, mesh, scfg, abstract_params, self._abstract_cache)
+        self._decode_loop = build_decode_loop(
             cfg, mesh, scfg, abstract_params, self._abstract_cache)
 
     def submit(self, prompt: np.ndarray,
@@ -161,55 +365,77 @@ class Server:
         self.queue.append(req)
         return req.uid
 
+    def _pad_prompt(self, r: Request) -> np.ndarray:
+        scfg = self.scfg
+        tokens = np.zeros((1, scfg.prompt_pad), np.int32)
+        L = min(len(r.prompt), scfg.prompt_pad)
+        tokens[0, scfg.prompt_pad - L:] = r.prompt[-L:]        # left-pad
+        return tokens
+
     def run(self) -> List[Request]:
         """Serve until the queue drains; returns finished requests."""
         scfg = self.scfg
-        while self.queue:
-            active = self.queue[:scfg.slots]
-            self.queue = self.queue[scfg.slots:]
-            prompts = np.zeros((scfg.slots, scfg.prompt_pad), np.int32)
-            lengths = np.zeros(scfg.slots, np.int64)
-            for i, r in enumerate(active):
-                L = min(len(r.prompt), scfg.prompt_pad)
-                prompts[i, scfg.prompt_pad - L:] = r.prompt[-L:]  # left-pad
-                lengths[i] = scfg.prompt_pad
-
-            with self.mesh:
-                cache = jax.jit(
-                    lambda: MZ.init_cache(self.cfg, scfg.slots,
-                                          scfg.max_len),
-                    out_shardings=SH.named(
-                        self.mesh, SH.cache_specs(
-                            self._abstract_cache, self.cfg, self.mesh,
-                            kv_mode=scfg.kv_mode)))()
-                batch = {"tokens": jnp.asarray(prompts)}
-                logits, cache = self._prefill(self.params, batch, cache)
-                self._key, sk = jax.random.split(self._key)
-                tok = sample_token(logits[:, :self.cfg.vocab_size], sk,
-                                   scfg.temperature)
-                pos = int(lengths.max())
-                max_new = max(r.max_new for r in active)
-                for t in range(max_new):
-                    tok_host = np.asarray(tok)
-                    alive = 0
-                    for i, r in enumerate(active):
-                        if r.done or t >= r.max_new:
-                            continue
-                        token = int(tok_host[i])
-                        r.out.append(token)
-                        if token == scfg.eos_token:
-                            r.done = True
-                        else:
-                            alive += 1
-                    if alive == 0 or pos + 1 >= scfg.max_len:
-                        break
-                    logits, cache = self._decode(
-                        self.params, tok, cache, jnp.asarray(pos))
+        slot_req: List[Optional[Request]] = [None] * scfg.slots
+        with self.mesh:
+            cache = self._init_cache()
+            state = init_decode_state(scfg.slots)
+            while self.queue or any(slot_req):
+                if not any(slot_req) and self.queue:
+                    # cold start / wave boundary: every slot is free —
+                    # one batched prefill instead of `slots` dispatches
+                    take = self.queue[:scfg.slots]
+                    self.queue = self.queue[scfg.slots:]
+                    prompts = np.zeros((scfg.slots, scfg.prompt_pad),
+                                       np.int32)
+                    budgets = np.zeros(scfg.slots, np.int32)
+                    valid = np.zeros(scfg.slots, bool)
+                    for i, r in enumerate(take):
+                        prompts[i] = self._pad_prompt(r)[0]
+                        budgets[i] = r.max_new
+                        valid[i] = True
+                        slot_req[i] = r
                     self._key, sk = jax.random.split(self._key)
-                    tok = sample_token(logits[:, :self.cfg.vocab_size], sk,
-                                       scfg.temperature)
-                    pos += 1
-            for r in active:
-                r.done = True
-                self.finished.append(r)
+                    cache, state = self._prefill_wave(
+                        self.params, {"tokens": jnp.asarray(prompts)},
+                        cache, jnp.asarray(valid), jnp.asarray(budgets), sk)
+                    self.stats["prefills"] += len(take)
+                else:
+                    # continuous refill: per-slot prefill into the shared
+                    # cache; live slots keep decoding from their positions
+                    for i in range(scfg.slots):
+                        if slot_req[i] is not None or not self.queue:
+                            continue
+                        r = self.queue.pop(0)
+                        self._key, sk = jax.random.split(self._key)
+                        cache, state = self._prefill_slot(
+                            self.params, {"tokens": jnp.asarray(
+                                self._pad_prompt(r))},
+                            cache, state, jnp.asarray(i, jnp.int32),
+                            jnp.asarray(r.max_new, jnp.int32), sk)
+                        slot_req[i] = r
+                        self.stats["prefills"] += 1
+                if not any(slot_req):
+                    break
+                # one chunk: decode_chunk steps on-device, one sync back
+                self._key, sk = jax.random.split(self._key)
+                t0 = time.perf_counter()
+                cache, state, tokens, emitted = self._decode_loop(
+                    self.params, cache, state, sk)
+                blk, emit, done = _device_fetch(
+                    (tokens, emitted, state["done"]))
+                dt = time.perf_counter() - t0
+                self.sync_count += 1
+                n_emitted = 0
+                for t in range(scfg.decode_chunk):
+                    for i in range(scfg.slots):
+                        if emit[t, i] and slot_req[i] is not None:
+                            slot_req[i].out.append(int(blk[t, i]))
+                            n_emitted += 1
+                self.stats["chunk_s"].append(dt)
+                self.stats["chunk_tokens"].append(n_emitted)
+                for i in range(scfg.slots):
+                    if slot_req[i] is not None and done[i]:
+                        slot_req[i].done = True
+                        self.finished.append(slot_req[i])
+                        slot_req[i] = None
         return self.finished

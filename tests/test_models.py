@@ -179,3 +179,48 @@ def test_cnn_zoo_forward():
         specs = cnn.layer_shapes(name)
         assert all(s.shape[-2] % 4 == 0 for s in specs
                    if s.kind == "conv"), name   # CFU block alignment
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "zamba2-1.2b"])
+def test_decode_step_per_slot_positions(arch):
+    """Vector (B,) cache_pos == scalar cache_pos in lockstep, and a
+    staggered batch matches per-sequence independent decoding (the
+    serving engine's continuous-batching contract)."""
+    cfg = C.get_reduced(arch)
+    params = MZ.init_model(jax.random.key(2), cfg)
+    B, P, S = 2, 8, 24
+    toks = jax.random.randint(jax.random.key(3), (B, P), 1,
+                              cfg.vocab_size).astype(jnp.int32)
+    cache = MZ.init_cache(cfg, B, S, dtype=jnp.float32)
+    logits, cache = MZ.prefill(params, cfg, {"tokens": toks}, cache)
+    tok = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
+
+    l_s, c_s = MZ.decode_step(params, cfg, tok, cache, jnp.asarray(P))
+    l_v, c_v = MZ.decode_step(params, cfg, tok, cache,
+                              jnp.full((B,), P, jnp.int32))
+    np.testing.assert_allclose(np.asarray(l_s), np.asarray(l_v),
+                               rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_v)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+    # stagger: advance sequence 1 by two extra (batch-1) decode steps,
+    # then decode the pair with per-slot positions [P, P+2]
+    c1 = jax.tree.map(lambda l: l[:, 1:2], cache)
+    t1 = tok[1:]
+    pos = P
+    for _ in range(2):
+        l1, c1 = MZ.decode_step(params, cfg, t1, c1, jnp.asarray(pos))
+        t1 = jnp.argmax(l1[:, :cfg.vocab_size], -1).astype(jnp.int32)
+        pos += 1
+    big = jax.tree.map(lambda a, b: jnp.concatenate([a[:, :1], b], axis=1),
+                       cache, c1)
+    tokv = jnp.stack([tok[0], t1[0]])
+    lv, _ = MZ.decode_step(params, cfg, tokv, big,
+                           jnp.asarray([P, pos], jnp.int32))
+    l1_ref, _ = MZ.decode_step(params, cfg, t1, c1, jnp.asarray(pos))
+    l0_ref, _ = MZ.decode_step(params, cfg, tok, cache, jnp.asarray(P))
+    np.testing.assert_allclose(np.asarray(lv[1]), np.asarray(l1_ref[0]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(lv[0]), np.asarray(l0_ref[0]),
+                               rtol=1e-4, atol=1e-4)

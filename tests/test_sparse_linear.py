@@ -83,3 +83,59 @@ def test_lookahead_end_to_end_int7_effect():
     out_q = apply_linear(x, packed, cfg)
     rel = float(jnp.linalg.norm(out_q - out_fp) / jnp.linalg.norm(out_fp))
     assert rel < 0.02   # ≈ int7 quantization noise, not structural error
+
+
+def test_pack_params_stacked_model():
+    """pack_params packs scan-stacked weights per family config, leaves
+    non-matching/meta weights dense, and the packed model's forward
+    equals the per-layer pruned-dense forward."""
+    from repro.core.sparsity import NMPack
+    from repro.core.sparse_linear import pack_params
+
+    scfg = SparsityConfig(format="nm", n=2, m=4, block_n=8)
+    cfg = ModelConfig(name="t", n_layers=2, d_model=32, vocab_size=128,
+                      n_heads=2, n_kv_heads=2, d_ff=64,
+                      mlp_sparsity=scfg, remat=False)
+    p = TR.init_lm(jax.random.key(0), cfg)
+    packed = pack_params(p, cfg)
+
+    mlp = packed["layers"]["mlp"]
+    for name in ("w_in", "w_gate", "w_out"):
+        if name in mlp:
+            assert isinstance(mlp[name], NMPack), name
+            assert mlp[name].values.shape[0] == cfg.n_layers  # stacked
+    # attn stays dense (attn_sparsity=DENSE), embeddings untouched
+    assert not hasattr(packed["layers"]["attn"]["wq"], "values")
+    assert packed["embed"].shape == p["embed"].shape
+
+    # oracle: prune each layer's mlp weights in place, keep dense arrays
+    def prune_mlp(path, leaf):
+        names = [str(q.key) for q in path if hasattr(q, "key")]
+        if any(n in ("w_in", "w_gate", "w_out") for n in names):
+            return jnp.stack([prune_weight(s, scfg)[0] for s in leaf])
+        return leaf
+
+    pruned = jax.tree_util.tree_map_with_path(prune_mlp, p)
+    toks = jax.random.randint(jax.random.key(1), (2, 8), 1, 128)
+    out = TR.lm_logits(packed, cfg, toks)
+    ref = TR.lm_logits(pruned, cfg, toks)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_pack_params_block_uniform_pad():
+    """block packs across stacked layers share one max_nnz (rectangular
+    stack) and still densify to the pruned weights."""
+    from repro.core.sparsity import BlockSparsePack
+    from repro.core.sparse_linear import pack_params
+
+    scfg = SparsityConfig(format="block", sparsity=0.5, block_k=16,
+                          block_n=8)
+    cfg = ModelConfig(name="t", n_layers=3, d_model=32, vocab_size=128,
+                      n_heads=2, n_kv_heads=2, d_ff=64,
+                      mlp_sparsity=scfg, remat=False)
+    p = TR.init_lm(jax.random.key(2), cfg)
+    packed = pack_params(p, cfg)
+    w = packed["layers"]["mlp"]["w_in"]
+    assert isinstance(w, BlockSparsePack)
+    assert w.values.shape[0] == 3 and w.values.ndim == 5
