@@ -1,5 +1,6 @@
 """Serving-engine benchmark: end-to-end tokens/sec and per-token latency
-for the chunked on-device decode loop vs the seed-style per-token loop.
+for the chunked on-device decode loop vs the seed-style per-token loop,
+plus the paged-vs-monolithic KV-cache scenario.
 
 Grid: {dense, nm, combined} × slots ∈ {1, 8}.  The sparse configs pack
 the MLP weights through ``core.sparse_linear.pack_params`` so decode
@@ -13,9 +14,20 @@ path the models use — nothing hand-wired).  For every cell we report:
   * ``ref_tok_per_s``    — the seed reference: whole-wave prefill + one
     jitted decode step and one host sync **per token**;
   * ``speedup``          — chunked / reference throughput (the number
-    the PR's acceptance gate reads at slots=8);
+    PR 2's acceptance gate reads at slots=8);
   * ``syncs``            — device→host transfers the chunked engine made
     (the ceil(tokens/decode_chunk) contract, observable).
+
+The **heterogeneous-length scenario** (``het-mono`` / ``het-paged``
+rows) serves a short-heavy prompt mix spanning 16–512 tokens on 8 slots
+at the same logical capacity: the monolithic engine reserves the full
+``slots × max_len`` cache and pads every prompt to 512, the paged engine
+(``page_size=16``, per-request prompt buckets, demand-sized page pool)
+allocates pages for actual lengths.  Reported per engine: ``tok_per_s``,
+``kv_mb`` (allocated cache), plus for paged ``peak_used_mb`` (pages in
+flight), ``kv_ratio`` (mono/paged allocated bytes) and
+``speedup_vs_mono`` — PR 3's acceptance gate reads kv_ratio ≥ 2 or
+speedup ≥ 1.3.
 
 Shapes shrink under ``REPRO_BENCH_SMOKE=1`` (the CI smoke step) so one
 pass stays in seconds.
@@ -53,6 +65,40 @@ SPARSITY = {
                                block_k=64, block_n=64),
 }
 
+# --- heterogeneous-length scenario (paged vs monolithic KV cache) ----------
+# a short-heavy production-style prompt mix spanning 16–512 tokens; both
+# engines get the same logical capacity (max_len per slot) — monolithic
+# physically reserves slots×max_len and pads every prompt to HET_PAD,
+# paged allocates pages for actual lengths out of a demand-sized pool.
+HET_SLOTS = 8
+HET_PAGE = 16                       # KV rows per page
+HET_PAD = 512                       # monolithic uniform prompt pad
+HET_BUCKET = 64                     # paged per-request prompt bucket
+HET_MAX_NEW = 8 if SMOKE else 32
+HET_CHUNK = 8 if SMOKE else 16
+HET_MAX_LEN = HET_PAD + 2 * HET_MAX_NEW
+HET_LENS = ([16, 32, 64, 96, 128, 256, 384, 512] if SMOKE else
+            [16, 24, 32, 48, 64, 64, 96, 128, 160, 256, 384, 512])
+
+
+def _het_scfg() -> ServeConfig:
+    """The paged heterogeneous config sans pool size (set below)."""
+    return ServeConfig(
+        slots=HET_SLOTS, max_len=HET_MAX_LEN, prompt_pad=HET_PAD,
+        max_new_tokens=HET_MAX_NEW, decode_chunk=HET_CHUNK,
+        temperature=0.0, eos_token=-1, page_size=HET_PAGE,
+        prompt_buckets=HET_BUCKET, page_view_chunk=8)
+
+
+def _het_pool_pages() -> int:
+    """Demand-sized pool: the worst-case pages of any HET_SLOTS requests
+    live at once (so admission never throttles this workload) — computed
+    through the engine's own admission math so they can't drift."""
+    scfg = _het_scfg()
+    need = sorted((scfg.request_pages(L, HET_MAX_NEW) for L in HET_LENS),
+                  reverse=True)
+    return sum(need[:HET_SLOTS])
+
 
 def _model(fmt: str):
     scfg = SPARSITY[fmt]
@@ -71,18 +117,26 @@ def _requests(rng, n):
                          ).astype(np.int32) for _ in range(n)]
 
 
-def _serve_chunked(cfg, mesh, params, slots, requests):
-    scfg = ServeConfig(slots=slots, max_len=MAX_LEN, prompt_pad=PROMPT_PAD,
-                       max_new_tokens=MAX_NEW, decode_chunk=DECODE_CHUNK,
-                       temperature=0.0, eos_token=-1)
+def _serve_chunked(cfg, mesh, params, slots, requests, scfg=None,
+                   warm_all=False, max_new=None):
+    scfg = scfg or ServeConfig(
+        slots=slots, max_len=MAX_LEN, prompt_pad=PROMPT_PAD,
+        max_new_tokens=MAX_NEW, decode_chunk=DECODE_CHUNK,
+        temperature=0.0, eos_token=-1)
     server = Server(cfg, mesh, scfg, params)
-    server.submit(requests[0][: PROMPT_PAD], max_new=DECODE_CHUNK + 1)
+    if warm_all:
+        # heterogeneous mix: visit every prompt bucket / view bucket so
+        # the timed run pays zero compiles
+        for p in requests:
+            server.submit(p, max_new=max_new)
+    else:
+        server.submit(requests[0][: scfg.prompt_pad],
+                      max_new=scfg.decode_chunk + 1)
     server.run()                                    # compile warm-up
     server.finished.clear()
-    server.sync_count = 0
-    server.stats = {"chunk_s": [], "chunk_tokens": [], "prefills": 0}
+    server.reset_stats()
     for p in requests:
-        server.submit(p)
+        server.submit(p, max_new=max_new)
     t0 = time.perf_counter()
     done = server.run()
     wall = time.perf_counter() - t0
@@ -92,10 +146,19 @@ def _serve_chunked(cfg, mesh, params, slots, requests):
         for s, n in zip(server.stats["chunk_s"],
                         server.stats["chunk_tokens"]) if n]) \
         if server.stats["chunk_tokens"] else np.zeros(1)
+    page_bytes_used = 0
+    if scfg.paged:
+        leaf_bytes = server.cache_bytes()
+        # per-page bytes across layers ≈ pool bytes / (pool+null pages)
+        page_bytes_used = int(
+            leaf_bytes * server.stats["peak_pages"] / (scfg.pool_pages + 1))
     return {"tokens": toks, "tok_per_s": toks / wall,
             "p50_ms": float(np.percentile(per_tok_ms, 50)),
             "p95_ms": float(np.percentile(per_tok_ms, 95)),
-            "syncs": server.sync_count, "wall_s": wall}
+            "syncs": server.sync_count, "wall_s": wall,
+            "kv_bytes": server.cache_bytes(),
+            "peak_used_bytes": page_bytes_used,
+            "admission_waits": server.stats["admission_waits"]}
 
 
 def _serve_per_token(cfg, mesh, params, slots, requests):
@@ -147,6 +210,45 @@ def _serve_per_token(cfg, mesh, params, slots, requests):
     return {"tokens": toks, "tok_per_s": toks / wall, "wall_s": wall}
 
 
+def _het_scenario(mesh) -> list:
+    """Paged vs monolithic serving of the heterogeneous prompt mix."""
+    import dataclasses
+    cfg, params = _model("dense")
+    rng = np.random.default_rng(1)
+    requests = [rng.integers(1, VOCAB, size=L).astype(np.int32)
+                for L in HET_LENS]
+    paged_scfg = dataclasses.replace(_het_scfg(),
+                                     num_pages=_het_pool_pages())
+    mono_scfg = dataclasses.replace(paged_scfg, page_size=0, num_pages=0,
+                                    prompt_buckets=0)
+    mono = _serve_chunked(cfg, mesh, params, HET_SLOTS, requests,
+                          scfg=mono_scfg, warm_all=True)
+    paged = _serve_chunked(cfg, mesh, params, HET_SLOTS, requests,
+                           scfg=paged_scfg, warm_all=True)
+    mb = 1.0 / (1024 * 1024)
+    return [
+        {"config": "het-mono", "slots": HET_SLOTS,
+         "tokens": mono["tokens"],
+         "tok_per_s": round(mono["tok_per_s"], 1),
+         "p50_ms": round(mono["p50_ms"], 3),
+         "p95_ms": round(mono["p95_ms"], 3),
+         "syncs": mono["syncs"],
+         "kv_mb": round(mono["kv_bytes"] * mb, 3)},
+        {"config": "het-paged", "slots": HET_SLOTS,
+         "tokens": paged["tokens"],
+         "tok_per_s": round(paged["tok_per_s"], 1),
+         "p50_ms": round(paged["p50_ms"], 3),
+         "p95_ms": round(paged["p95_ms"], 3),
+         "syncs": paged["syncs"],
+         "kv_mb": round(paged["kv_bytes"] * mb, 3),
+         "peak_used_mb": round(paged["peak_used_bytes"] * mb, 3),
+         "kv_ratio": round(mono["kv_bytes"] / paged["kv_bytes"], 2),
+         "speedup_vs_mono": round(paged["tok_per_s"]
+                                  / max(mono["tok_per_s"], 1e-9), 2),
+         "admission_waits": paged["admission_waits"]},
+    ]
+
+
 def run() -> dict:
     rng = np.random.default_rng(0)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
@@ -168,7 +270,11 @@ def run() -> dict:
                 "speedup": round(chunked["tok_per_s"]
                                  / max(ref["tok_per_s"], 1e-9), 2),
             })
+    rows.extend(_het_scenario(mesh))
     return {"rows": rows, "decode_chunk": DECODE_CHUNK, "max_new": MAX_NEW,
+            "het": {"lens": HET_LENS, "page_size": HET_PAGE,
+                    "max_len": HET_MAX_LEN, "pool_pages": _het_pool_pages(),
+                    "max_new": HET_MAX_NEW},
             "backend": jax.default_backend()}
 
 
@@ -181,9 +287,27 @@ def main(out=None) -> None:
     print("config,slots,tokens,tok_per_s,p50_ms,p95_ms,syncs,"
           "ref_tok_per_s,speedup")
     for r in out["rows"]:
+        if r["config"].startswith("het-"):
+            continue
         print(f"{r['config']},{r['slots']},{r['tokens']},"
               f"{r['tok_per_s']},{r['p50_ms']},{r['p95_ms']},{r['syncs']},"
               f"{r['ref_tok_per_s']},{r['speedup']}")
+    het = [r for r in out["rows"] if r["config"].startswith("het-")]
+    if het:
+        h = out.get("het", {})
+        print(f"# heterogeneous prompts {min(h.get('lens', [0]))}–"
+              f"{max(h.get('lens', [0]))} on {HET_SLOTS} slots — paged "
+              f"(page_size={h.get('page_size')}, pool="
+              f"{h.get('pool_pages')} pages) vs monolithic "
+              f"(max_len={h.get('max_len')})")
+        print("config,slots,tokens,tok_per_s,p50_ms,p95_ms,syncs,kv_mb,"
+              "peak_used_mb,kv_ratio,speedup_vs_mono,admission_waits")
+        for r in het:
+            print(f"{r['config']},{r['slots']},{r['tokens']},"
+                  f"{r['tok_per_s']},{r['p50_ms']},{r['p95_ms']},"
+                  f"{r['syncs']},{r['kv_mb']},{r.get('peak_used_mb', '')},"
+                  f"{r.get('kv_ratio', '')},{r.get('speedup_vs_mono', '')},"
+                  f"{r.get('admission_waits', '')}")
 
 
 if __name__ == "__main__":

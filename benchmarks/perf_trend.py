@@ -11,10 +11,16 @@ only, so grid changes don't fail the gate):
   * ``serving`` — ``tok_per_s`` per (config, slots) row (higher is better)
 
 A row regresses when it is worse than baseline by more than ``threshold``
-(relative).  Missing/corrupt baseline (e.g. the first run on a branch, or
-an expired artifact) exits 0 — the gate only *blocks* when there is
-something real to compare, per the ROADMAP note: non-blocking until a
-baseline exists, blocking on >30% regressions after.
+(relative).  Keys present in only one of {baseline, current} are
+reported but never block: a benchmark's *first* run (new row, no
+baseline yet) and a retired benchmark (baseline row gone from current)
+both pass — new benchmarks must be able to land without failing the
+blocking job they'll feed.  Rows missing the section metric (or with a
+non-numeric value) are skipped the same way.  Missing/corrupt baseline
+(e.g. the first run on a branch, or an expired artifact) exits 0 — the
+gate only *blocks* when there is something real to compare, per the
+ROADMAP note: non-blocking until a baseline exists, blocking on >30%
+regressions after.
 
 Stdlib-only on purpose: CI runs it without installing the package.
 """
@@ -64,6 +70,9 @@ def compare(baseline: dict, current: dict, threshold: float):
                          f"({change:+.1%}) {flag}")
             if worse > threshold:
                 regressions.append((section, key, b, c))
+        for key in sorted(set(base) - set(cur), key=str):
+            lines.append(f"  {section} {key}: {metric}={base[key]:g} "
+                         "(row absent from current run — informational)")
     return lines, regressions
 
 

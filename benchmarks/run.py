@@ -50,7 +50,28 @@ def main(argv=None) -> int:
                     help="write per-section wall time + structured results")
     ap.add_argument("--sections", default=None,
                     help="comma-separated subset of section names")
+    ap.add_argument("--warm-autotune", action="store_true",
+                    help="offline sweep populating the JSON autotune "
+                         "cache for the serving-relevant dispatch keys "
+                         "(kernel, M, K, N), then exit")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="--warm-autotune: serving slots (decode M)")
+    ap.add_argument("--prompt-pad", type=int, default=128,
+                    help="--warm-autotune: prompt pad (per-slot refill "
+                         "M; slots*prompt_pad is the wave-prefill M, "
+                         "swept on TPU only)")
     args = ap.parse_args(argv)
+
+    if args.warm_autotune:
+        from benchmarks import warm_autotune
+        out = warm_autotune.run(slots=args.slots,
+                                prompt_pad=args.prompt_pad)
+        warm_autotune.main(out)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(_jsonable(out), f, indent=1, sort_keys=True)
+            print(f"wrote {args.json}")
+        return 0
 
     wanted = set(args.sections.split(",")) if args.sections else None
     unknown = (wanted or set()) - {n for n, _ in SECTIONS}

@@ -1,0 +1,149 @@
+"""Offline autotune warmer: populate the JSON block-size cache for the
+serving-relevant dispatch keys *before* the first request pays for it.
+
+  PYTHONPATH=src python -m benchmarks.run --warm-autotune
+
+The serving engine re-plans the dispatch layer per phase geometry
+(``M = slots`` for decode, ``M = prompt_pad`` for per-slot refill,
+``M = slots*prompt_pad`` for wave prefill); on the compiled path each
+``(kernel, M, K, N, dtype, pattern)`` key triggers a block-size sweep on
+first use.  This module runs those sweeps offline over the serving
+formats (nm / combined packed MLPs, the paged-attention cache geometry)
+and persists the winners to the cache (``REPRO_AUTOTUNE_CACHE`` or
+``~/.cache/repro/autotune.json``) — so a fresh server's first request
+hits warm cache entries instead of eating the sweep (ROADMAP: "feed real
+sweep timings into the cache").
+
+On TPU the sweeps time the *compiled* kernels (real timings); elsewhere
+they run in interpret mode, which exercises the exact kernel logic and
+the full cache machinery on the same keys (useful for CI and for
+verifying the flow, not for timing quality).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.dispatch import PACK_TYPES
+
+
+def _serving_ms(slots: int, prompt_pad: int, interpret: bool) -> List[int]:
+    """The Ms the engine plans at.  Interpret mode (CPU) skips the wave
+    geometry — interpreting a ``slots*prompt_pad``-row sweep takes
+    minutes and times nothing real."""
+    ms = {slots, prompt_pad}
+    if not interpret:
+        ms.add(slots * prompt_pad)
+    return sorted(ms)
+
+
+def _base_ndim(pack, arr) -> int:
+    """ndim this array leaf has in an *unstacked* (single-layer) pack."""
+    fields = {
+        "values": 4 if hasattr(pack, "counts") else 2,   # bsr/csa vs nm
+        "indices": 2, "counts": 1, "gidx": 3, "idx": 2,
+        "enc": 2, "scale": 2,
+    }
+    for name, nd in fields.items():
+        if getattr(pack, name, None) is arr:
+            return nd
+    return arr.ndim
+
+
+def _layer_packs(params) -> List:
+    """Distinct per-layer 2D packs from a (scan-stacked) param pytree —
+    one representative slice per geometry, deduped by dispatch pattern.
+    Stacked leading axes are peeled to layer 0 (the pack's static
+    geometry describes the 2D slice, matching how lax.scan feeds it)."""
+    seen, packs = set(), []
+
+    def visit(leaf):
+        if isinstance(leaf, PACK_TYPES):
+            def peel(a, pack=leaf):
+                while a.ndim > _base_ndim(pack, a):
+                    a = a[0]
+                return a
+            sl = jax.tree.map(peel, leaf)
+            d = dispatch.SparsityDescriptor.of(sl)
+            key = (d.kind, d.pattern, d.K, d.N)
+            if key not in seen:
+                seen.add(key)
+                packs.append(sl)
+        return leaf
+
+    jax.tree.map(visit, params,
+                 is_leaf=lambda x: isinstance(x, PACK_TYPES))
+    return packs
+
+
+def run(slots: int = 8, prompt_pad: int = 128, reps: int = 1) -> dict:
+    """Sweep and persist; returns {"entries": [...], "cache_path": ...}.
+
+    ``slots``/``prompt_pad`` should match the target server's
+    ``ServeConfig`` (defaults mirror its defaults) — the cache keys carry
+    M, so a warm at the wrong geometry warms nothing.
+    """
+    from benchmarks.bench_serving import (HET_MAX_LEN, HET_PAGE, SPARSITY,
+                                          _model)
+    interpret = not dispatch.has_tpu()
+    mode = "interpret" if interpret else "compiled"
+    cache = dispatch.autotune_cache()
+    entries = []
+    t0 = time.time()
+    for fmt in SPARSITY:
+        if SPARSITY[fmt] is None:
+            continue                      # dense: nothing to tune
+        cfg, params = _model(fmt)
+        for pack in _layer_packs(params):
+            d = dispatch.SparsityDescriptor.of(pack)
+            dtype = getattr(pack, "values", getattr(pack, "enc", None)).dtype
+            for M in _serving_ms(slots, prompt_pad, interpret):
+                x = jax.random.normal(jax.random.key(0), (M, d.K),
+                                      jnp.float32).astype(dtype)
+                key = dispatch.cache_key(
+                    dispatch._entry_for(d, M).name, M, d, mode)
+                was_cached = cache.get(key) is not None
+                blocks = dispatch.tune(x, pack, mode=mode, reps=reps)
+                entries.append({"key": key, "blocks": blocks,
+                                "cached": was_cached})
+    # paged-attention: the decode-geometry key for the bench cache shape
+    # (static config only — no weights needed for zero-filled pools)
+    from repro.models.config import ModelConfig
+    from repro.kernels.paged_attention import PagedKV
+    cfg = ModelConfig(name="warm-paged", n_layers=1, d_model=64,
+                      vocab_size=256, n_heads=4, n_kv_heads=2, d_ff=128)
+    mp = -(-HET_MAX_LEN // HET_PAGE)
+    kv = PagedKV(
+        jnp.zeros((slots * mp + 1, HET_PAGE, cfg.n_kv_heads,
+                   cfg.head_dim), jnp.bfloat16),
+        jnp.zeros((slots * mp + 1, HET_PAGE, cfg.n_kv_heads,
+                   cfg.head_dim), jnp.bfloat16),
+        jnp.zeros((slots, mp), jnp.int32),
+        jnp.full((slots,), HET_PAGE, jnp.int32))
+    q = jnp.zeros((slots, cfg.n_heads, cfg.head_dim), jnp.bfloat16)
+    d = dispatch.SparsityDescriptor.of(kv)
+    key = dispatch.cache_key("paged_attention", slots, d, mode)
+    was_cached = cache.get(key) is not None
+    blocks = dispatch.tune(q, kv, mode=mode, reps=reps)
+    entries.append({"key": key, "blocks": blocks, "cached": was_cached})
+    return {"entries": entries, "mode": mode, "wall_s": time.time() - t0,
+            "cache_path": cache.path, "cache_size": len(cache)}
+
+
+def main(out=None) -> None:
+    if out is None:
+        out = run()
+    print(f"# autotune warm — {len(out['entries'])} serving keys swept "
+          f"({out['mode']} mode, {out['wall_s']:.1f}s)")
+    for e in out["entries"]:
+        print(f"  {e['key']} -> {e['blocks']}")
+    print(f"cache: {out['cache_path']} ({out['cache_size']} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -265,7 +265,16 @@ def cache_specs(abstract_cache: Any, cfg: ModelConfig, mesh: Mesh,
         names = _path_names(path)
         last = names[-1]
         nd = len(leaf.shape)
-        if last in ("k", "v") and nd == 5:
+        if last in ("kp", "vp") and nd == 5:
+            # paged KV pool (nl, P, ps, Hk, D): pages are a global pool
+            # addressed by every slot's table, so they replicate over the
+            # DP axes; KV heads shard over model when they divide (the
+            # "heads" posture).  Page tables ("ptab", int32) replicate
+            # via the default rule below.
+            Hk = leaf.shape[3]
+            head_ax = "model" if Hk % model_ext == 0 else None
+            spec = P(None, None, None, head_ax, None)
+        elif last in ("k", "v") and nd == 5:
             mode = kv_mode
             if mode == "auto":
                 Hk = leaf.shape[3]

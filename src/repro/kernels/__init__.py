@@ -2,8 +2,10 @@
 
 Layout:
   * ``nm_spmm`` / ``bsr_matmul`` / ``csa_matmul`` / ``lookahead_decode`` /
-    ``flash_attention`` — the Pallas TPU kernels (USSA / SSSA / CSA
-    analogues + the faithful LSB decode and fused attention);
+    ``flash_attention`` / ``paged_attention`` — the Pallas TPU kernels
+    (USSA / SSSA / CSA analogues, the faithful LSB decode, fused
+    attention, and decode attention over the paged KV cache via a
+    scalar-prefetched page table);
   * ``ref``      — pure-jnp oracles (also the CPU production path);
   * ``ops``      — thin per-format jit'd wrappers (kernel tests use these);
   * ``dispatch`` — the public entry point: kernel registry, sparsity-

@@ -67,8 +67,12 @@ class SparsityDescriptor:
 
     ``pattern`` is the human-readable sparsity signature used in cache
     keys and logs: ``"2:4g128"``, ``"bsr128x128d0.50"``, ``"dense"``, …
+    For the paged-attention family the descriptor summarizes the *cache*
+    geometry instead of a weight: ``K`` is the logical KV view
+    (``max_pages * page_size``), ``N`` the head dim, ``g`` the page size
+    and ``bk`` the page count — so plan/autotune keys are page-shaped.
     """
-    kind: str                      # dense | block | nm | combined | lookahead
+    kind: str          # dense | block | nm | combined | lookahead | paged
     K: int
     N: int
     dtype: str
@@ -88,6 +92,8 @@ class SparsityDescriptor:
         if self.kind == "combined":
             return (f"csa{self.bk}x{self.bn}d{self.density:.2f}"
                     f"+{self.n}:{self.m}")
+        if self.kind == "paged":
+            return f"paged{self.g}x{self.bk}"
         return self.kind
 
     @classmethod
@@ -110,6 +116,12 @@ class SparsityDescriptor:
         if isinstance(weight, LookaheadPack):
             return cls(kind="lookahead", K=weight.K, N=weight.N,
                        dtype=str(weight.enc.dtype))
+        if hasattr(weight, "ptab") and hasattr(weight, "lens"):
+            # kernels.paged_attention.PagedKV (duck-typed so this module
+            # stays pallas-import-free): descriptor of the cache geometry
+            ps, mp = weight.page_size, weight.max_pages
+            return cls(kind="paged", K=mp * ps, N=weight.head_dim,
+                       dtype=str(weight.k.dtype), g=ps, bk=mp)
         if hasattr(weight, "shape") and len(weight.shape) >= 2:
             return cls(kind="dense", K=weight.shape[-2], N=weight.shape[-1],
                        dtype=str(weight.dtype))
@@ -393,6 +405,24 @@ register(KernelEntry(
     candidates=_lookahead_candidates))
 
 
+def _paged_attn_run(x, kv, mode, blocks):
+    """``x`` is the decode query block (B, H, D); ``kv`` a PagedKV."""
+    if mode == "ref":
+        return _ref.paged_attention_ref(x, kv.k, kv.v, kv.ptab, kv.lens)
+    from repro.kernels.paged_attention import paged_attention as _pa
+    return _pa(x, kv.k, kv.v, kv.ptab, kv.lens,
+               interpret=(mode == "interpret"))
+
+
+register(KernelEntry(
+    name="paged_attention", kind="paged",
+    supports=lambda d, M: True,
+    run=_paged_attn_run,
+    # the grid is fixed by the cache geometry — candidates record the
+    # page shape so plans and autotune keys stay page-addressed
+    candidates=lambda d, M: [{"ps": d.g, "pages": d.bk}]))
+
+
 def _dense_run(x, w, mode, blocks):
     return jnp.dot(x, w)
 
@@ -578,6 +608,48 @@ def _ref_matmul(x: Array, weight: Any) -> Array:
     if isinstance(weight, LookaheadPack):
         return _ref.lookahead_matmul_ref(x, weight)
     return jnp.dot(x, weight)
+
+
+def paged_attention(q: Array, kv: Any, *, impl: str = "auto") -> Array:
+    """Decode attention against a paged KV cache, behind the same mode
+    policy as the matmuls.
+
+    ``q (B, H, D)`` (one query per sequence), ``kv`` a
+    :class:`kernels.paged_attention.PagedKV`.  ``ref`` mode runs the
+    gather oracle (the CPU production path); kernel modes run the Pallas
+    scalar-prefetch kernel, whose grid walks pages through the page
+    table and never materializes the gathered view.
+    """
+    mode = resolve_mode(impl)
+    return _paged_attn_run(q, kv, mode, {})
+
+
+def plan_paged_attention(cfg: Any, batch: int, page_size: int,
+                         max_pages: int, impl: str = "auto",
+                         dtype: str = "bfloat16") -> dict:
+    """The paged-attention row of a serving plan — same shape as
+    :func:`plan_params` entries, keyed by the page-shaped descriptor so
+    the autotune cache and plan introspection see the cache geometry
+    (``paged{ps}x{pages}``) rather than a weight pattern.
+
+    Like the flash kernel (``dispatch.attention``), the Pallas kernel is
+    the *standalone* twin of the model-internal path: the serving decode
+    loop runs the inline jnp scatter/gather in ``models.attention`` (the
+    SPMD-partitionable form, semantically the ``ref`` oracle), while
+    :func:`paged_attention` exposes the kernel for page-shaped decode
+    calls and benchmarks; this row records the geometry both share."""
+    desc = SparsityDescriptor(kind="paged", K=max_pages * page_size,
+                              N=cfg.head_dim, dtype=dtype,
+                              g=page_size, bk=max_pages)
+    mode = resolve_mode(impl)
+    entry = _REGISTRY["paged_attention"]
+    blocks = dict(entry.candidates(desc, batch)[0])
+    hit = _CACHE.get(cache_key(entry.name, batch, desc, mode))
+    if hit is not None:
+        blocks = {k: v for k, v in hit.items() if k != "us"}
+    return {"param": "attention/kv_cache", "M": batch,
+            "kernel": entry.name, "mode": mode, "blocks": blocks,
+            "pattern": desc.pattern}
 
 
 def attention(q: Array, k: Array, v: Array, *, causal: bool = True,

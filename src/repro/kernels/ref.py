@@ -107,6 +107,49 @@ def lookahead_matmul_ref(x: Array, pack: LookaheadPack) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# Paged-attention oracle (for kernels/paged_attention.py)
+# ---------------------------------------------------------------------------
+
+def paged_attention_ref(q: Array, k_pool: Array, v_pool: Array,
+                        ptab: Array, lens: Array,
+                        scale: float | None = None) -> Array:
+    """Decode attention against a paged KV cache.
+
+    ``q (B, H, D)`` — one query per sequence (the token being decoded);
+    ``k_pool/v_pool (P, ps, Hk, D)`` — the shared page pools;
+    ``ptab (B, max_pages) int32`` — logical page ``j`` of sequence ``b``
+    lives in pool page ``ptab[b, j]``;
+    ``lens (B,) int32`` — valid KV rows per sequence (the query sits at
+    position ``lens - 1``, so the length mask subsumes causality).
+
+    Gathers each sequence's pages into a ``(max_pages*ps)`` logical view
+    and runs masked softmax attention — the semantic ground truth the
+    Pallas kernel (which never materializes the gather) is tested
+    against, and the CPU production path.
+    """
+    B, H, D = q.shape
+    ps, Hk = k_pool.shape[1], k_pool.shape[2]
+    k = k_pool[ptab]                                 # (B, np, ps, Hk, D)
+    v = v_pool[ptab]
+    L = k.shape[1] * ps
+    k = k.reshape(B, L, Hk, D).transpose(0, 2, 1, 3)  # (B, Hk, L, D)
+    v = v.reshape(B, L, Hk, D).transpose(0, 2, 1, 3)
+    if H != Hk:
+        k = jnp.repeat(k, H // Hk, axis=1)
+        v = jnp.repeat(v, H // Hk, axis=1)
+    s = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * s
+    mask = jnp.arange(L)[None, :] < lens[:, None]    # (B, L)
+    logits = jnp.where(mask[:, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (dead slots, lens == 0): emit zeros, not NaN
+    p = jnp.where(mask[:, None, :], p, 0.0)
+    return jnp.einsum("bhk,bhkd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Attention oracle (for kernels/flash_attention.py)
 # ---------------------------------------------------------------------------
 

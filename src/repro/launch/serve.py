@@ -31,6 +31,18 @@ def main() -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--decode-chunk", type=int, default=16,
                     help="on-device decode steps per host sync")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV rows per cache page; >0 switches the KV "
+                         "cache to the paged layout (pool + per-slot "
+                         "page tables)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="allocatable pages in the shared pool; 0 sizes "
+                         "it at full capacity (slots x max_len) — set "
+                         "lower to overcommit, requests then wait for "
+                         "pages at admission")
+    ap.add_argument("--prompt-buckets", type=int, default=0,
+                    help="paged only: pad each prompt to a multiple of "
+                         "this instead of the uniform --prompt-pad")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -63,7 +75,9 @@ def main() -> int:
                        prompt_pad=args.prompt_pad,
                        max_new_tokens=args.max_new,
                        decode_chunk=args.decode_chunk,
-                       temperature=args.temperature, seed=args.seed)
+                       temperature=args.temperature, seed=args.seed,
+                       page_size=args.page_size, num_pages=args.num_pages,
+                       prompt_buckets=args.prompt_buckets)
     server = Server(cfg, mesh, scfg, params)
 
     rng_np = np.random.default_rng(args.seed)
@@ -76,14 +90,23 @@ def main() -> int:
     done = server.run()
     dt = time.time() - t0
     toks = sum(len(r.out) for r in done)
-    print(json.dumps({
+    report = {
         "arch": cfg.name, "requests": len(done),
         "generated_tokens": toks, "wall_s": round(dt, 2),
         "tok_per_s": round(toks / dt, 1),
         "decode_chunk": scfg.decode_chunk,
         "host_syncs": server.sync_count,
         "prefills": server.stats["prefills"],
-    }))
+        "kv_cache_mb": round(server.cache_bytes() / 2**20, 2),
+    }
+    if scfg.paged:
+        report.update({
+            "page_size": scfg.page_size,
+            "pool_pages": scfg.pool_pages,
+            "peak_pages": server.stats["peak_pages"],
+            "admission_waits": server.stats["admission_waits"],
+        })
+    print(json.dumps(report))
     return 0
 
 

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from repro.models import encdec as ED
 from repro.models import hybrid as HY
 from repro.models import transformer as TR
-from repro.models.attention import init_kv_cache
+from repro.models.attention import (init_kv_cache, init_paged_kv_cache,
+                                    paged_max_pages)
 from repro.models.config import LayerKind, ModelConfig
 
 Array = jax.Array
@@ -85,13 +86,30 @@ def model_logits(params: Params, cfg: ModelConfig,
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                src_len: Optional[int] = None,
-               dtype=jnp.bfloat16) -> Params:
+               dtype=jnp.bfloat16, page_size: int = 0,
+               num_pages: int = 0) -> Params:
+    """Serving cache for any family.
+
+    ``page_size > 0`` selects the paged layout for every attention KV
+    subtree (lm: the whole cache; hybrid: the shared-attention ``kv``;
+    encdec: the decoder ``self`` cache — cross K/V is decode-invariant
+    and per-slot fixed-size, so it stays monolithic).  ``num_pages``
+    sizes the shared pool (0 → full capacity, see
+    :func:`attention.init_paged_kv_cache`).
+    """
     f = family(cfg)
     if f == "encdec":
         return ED.init_encdec_cache(cfg, batch, max_len,
-                                    src_len or max_len, dtype)
+                                    src_len or max_len, dtype,
+                                    page_size=page_size,
+                                    num_pages=num_pages)
     if f == "hybrid":
-        return HY.init_hybrid_cache(cfg, batch, max_len, dtype)
+        return HY.init_hybrid_cache(cfg, batch, max_len, dtype,
+                                    page_size=page_size,
+                                    num_pages=num_pages)
+    if page_size:
+        return init_paged_kv_cache(cfg, batch, max_len, page_size,
+                                   num_pages, dtype=dtype)
     return init_kv_cache(cfg, batch, max_len, dtype=dtype)
 
 
@@ -125,24 +143,100 @@ def decode_step(params: Params, cfg: ModelConfig, token: Array,
     return TR.lm_decode_step(params, cfg, token, cache, pos)
 
 
+def _is_paged(tree: Any) -> bool:
+    return isinstance(tree, dict) and "ptab" in tree
+
+
 def blank_slot_cache(cache: Params, batch: int = 1) -> Params:
-    """A zeroed copy of ``cache`` with the batch axis (axis 1 on every
-    leaf) shrunk to ``batch`` — the scratch cache a per-slot prefill
-    fills before :func:`merge_cache_slot` writes it into the shared one."""
-    return jax.tree.map(
-        lambda l: jnp.zeros(l.shape[:1] + (batch,) + l.shape[2:], l.dtype),
-        cache)
+    """The scratch cache a per-slot prefill fills before
+    :func:`merge_cache_slot` writes it into the shared one.
+
+    Monolithic subtrees get a zeroed copy with the batch axis (axis 1 on
+    every leaf) shrunk to ``batch``.  Paged subtrees share the page
+    *pool* by reference (per-slot prefill scatters straight into it —
+    the slot's pages are disjoint from every live slot's) and get a
+    batch-``batch`` all-null page table; the engine stamps the slot's
+    assigned pages into it (:func:`set_page_table`) before prefilling.
+    """
+    if _is_paged(cache):
+        mp = cache["ptab"].shape[-1]
+        nl = cache["ptab"].shape[0]
+        return {"kp": cache["kp"], "vp": cache["vp"],
+                "ptab": jnp.zeros((nl, batch, mp), jnp.int32)}
+    if isinstance(cache, dict):
+        return {k: blank_slot_cache(v, batch) for k, v in cache.items()}
+    return jnp.zeros(cache.shape[:1] + (batch,) + cache.shape[2:],
+                     cache.dtype)
 
 
 def merge_cache_slot(cache: Params, slot_cache: Params, slot: Array) -> Params:
     """Write a batch-1 cache into slot ``slot`` of a shared cache.
 
-    Every cache leaf across all families carries batch on axis 1
+    Monolithic cache leaves across all families carry batch on axis 1
     (KV: (nl, B, S, Hk, D); SSM conv/state: (nl, B, ...); encdec
     self/cross: (nl, B, S, Hk, D)), so the merge is one
     ``dynamic_update_slice_in_dim`` per leaf — the cache-side half of
     per-slot prefill (continuous refill without draining the batch).
+    Paged subtrees already hold the prefill's pool writes (the scratch
+    shares the pool); only the slot's page-table row needs merging.
     """
-    return jax.tree.map(
-        lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-            full, one.astype(full.dtype), slot, axis=1), cache, slot_cache)
+    if _is_paged(cache):
+        return {"kp": slot_cache["kp"], "vp": slot_cache["vp"],
+                "ptab": jax.lax.dynamic_update_slice_in_dim(
+                    cache["ptab"], slot_cache["ptab"], slot, axis=1)}
+    if isinstance(cache, dict):
+        return {k: merge_cache_slot(cache[k], slot_cache[k], slot)
+                for k in cache}
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, slot_cache.astype(cache.dtype), slot, axis=1)
+
+
+def set_page_table(cache: Params, table: Array) -> Params:
+    """Replace every paged subtree's page table with ``table``.
+
+    ``table`` is ``(B, max_pages)`` int32 (the host allocator's view);
+    it is broadcast over the stacked-layers axis of each ``ptab`` leaf.
+    The host refreshes the device tables through this before each decode
+    chunk (page allocation / slot retirement happen between chunks) and
+    stamps a slot's assigned pages into the refill scratch with it.
+    """
+    if _is_paged(cache):
+        pt = cache["ptab"]
+        return {"kp": cache["kp"], "vp": cache["vp"],
+                "ptab": jnp.broadcast_to(table.astype(jnp.int32)[None],
+                                         pt.shape)}
+    if isinstance(cache, dict):
+        return {k: set_page_table(v, table) for k, v in cache.items()}
+    return cache
+
+
+def page_view(cache: Params, view_pages: Optional[int]) -> Params:
+    """Slice every page table to its first ``view_pages`` logical pages.
+
+    The gather-read in :func:`attention.attention` materializes
+    ``max_pages * ps`` logical rows per slot; when the host knows no live
+    slot extends past ``view_pages`` pages it narrows the view so decode
+    attention work scales with *actual* lengths (the compute-side half
+    of the paging win).  ``None`` keeps the full view.
+    """
+    if view_pages is None:
+        return cache
+    if _is_paged(cache):
+        return {"kp": cache["kp"], "vp": cache["vp"],
+                "ptab": cache["ptab"][..., :view_pages]}
+    if isinstance(cache, dict):
+        return {k: page_view(v, view_pages) for k, v in cache.items()}
+    return cache
+
+
+def unpage_view(new_cache: Params, full_cache: Params) -> Params:
+    """Undo :func:`page_view` on a model-returned cache: keep the updated
+    pools, restore the full-width page tables from ``full_cache`` (decode
+    never rewrites the table, so this is lossless)."""
+    if _is_paged(new_cache):
+        return {"kp": new_cache["kp"], "vp": new_cache["vp"],
+                "ptab": full_cache["ptab"]}
+    if isinstance(new_cache, dict):
+        return {k: unpage_view(new_cache[k], full_cache[k])
+                for k in new_cache}
+    return new_cache

@@ -10,9 +10,20 @@ standalone prefill shapes); projections dispatch through ``apply_linear``
 → ``kernels.dispatch`` so the paper's sparse formats apply to q/k/v/o like
 any other matmul.
 
-KV cache layout: ``{"k": (B, S, Hk, D), "v": (B, S, Hk, D), }`` per layer —
-sequence-major so decode updates are one ``dynamic_update_slice`` and the
-"kv_seq" axis can be sharded for long contexts (DESIGN.md §6).
+KV cache layouts (per layer):
+  * monolithic — ``{"k": (B, S, Hk, D), "v": (B, S, Hk, D)}``,
+    sequence-major so decode updates are one ``dynamic_update_slice`` and
+    the "kv_seq" axis can be sharded for long contexts (DESIGN.md §6).
+  * paged — ``{"kp": (P, ps, Hk, D), "vp": (P, ps, Hk, D),
+    "ptab": (B, max_pages) int32}``: a shared page *pool* plus a per-slot
+    page table mapping logical page ``j`` of slot ``b`` (rows
+    ``[j*ps, (j+1)*ps)``) to a pool page.  Page 0 is the reserved null
+    page: unallocated table entries point at it, writes from dead slots
+    land in it, and the kv-length mask keeps reads from ever attending to
+    it.  This is the memory-side analogue of the paper's metadata-driven
+    skipping — the page table is the few bits of indirection metadata
+    that let cache memory and attention work scale with *actual* sequence
+    lengths instead of the padded maximum.
 """
 
 from __future__ import annotations
@@ -53,6 +64,32 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     nl = n_layers if n_layers is not None else cfg.n_layers
     shape = (nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_max_pages(max_len: int, page_size: int) -> int:
+    """Logical pages per slot covering a ``max_len`` sequence."""
+    return -(-max_len // page_size)
+
+
+def init_paged_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                        page_size: int, num_pages: int = 0,
+                        n_layers: Optional[int] = None,
+                        dtype=jnp.bfloat16) -> Params:
+    """Paged cache: shared page pool + per-slot page table.
+
+    ``num_pages`` counts *allocatable* pages; one extra null page (pool
+    index 0) is always added, so the pool leaf is ``num_pages + 1`` pages
+    deep.  ``num_pages=0`` sizes the pool at full capacity
+    (``batch * max_pages`` — no memory win, but bit-identical serving for
+    parity tests).  The page table starts all-null.
+    """
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    mp = paged_max_pages(max_len, page_size)
+    if num_pages <= 0:
+        num_pages = batch * mp
+    pool = (nl, num_pages + 1, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"kp": jnp.zeros(pool, dtype), "vp": jnp.zeros(pool, dtype),
+            "ptab": jnp.zeros((nl, batch, mp), jnp.int32)}
 
 
 def _project_qkv(params: Params, cfg: ModelConfig, x: Array,
@@ -220,6 +257,9 @@ def attention(params: Params, cfg: ModelConfig, x: Array, positions: Array,
       * prefill / training: ``cache=None`` → self-attention over ``x``.
       * decode: ``cache`` holds (B, S, Hk, D) k/v for THIS layer and
         ``cache_pos`` (scalar) the write position; returns updated cache.
+        A paged layer cache (``{"kp", "vp", "ptab"}``, see module
+        docstring) is detected by its ``ptab`` key and routed through the
+        page-table scatter/gather instead.
       * cross-attention: ``cross_src`` is the encoder output (no rope on kv,
         no causal mask).
       * ``causal=False`` with ``cross_src=None``: bidirectional
@@ -259,7 +299,31 @@ def attention(params: Params, cfg: ModelConfig, x: Array, positions: Array,
 
     new_cache = None
     kv_len = None
-    if cache is not None:
+    if cache is not None and "ptab" in cache:
+        # paged cache: scatter the new rows into the pool pages named by
+        # the slot's page table, then gather the table back as a
+        # (B, max_pages*ps, Hk, D) logical view.  Row index == logical
+        # position, so the downstream mask/qpos math is unchanged; rows
+        # past kv_len read whatever the mapped page holds (null-page
+        # garbage included) and are masked exactly like monolithic
+        # garbage rows.
+        pt = cache["ptab"]                          # (B, max_pages)
+        ps = cache["kp"].shape[1]
+        B, Lq = x.shape[0], x.shape[1]
+        cp = jnp.asarray(cache_pos)
+        cpb = cp if cp.ndim == 1 else jnp.broadcast_to(cp, (B,))
+        posn = cpb[:, None] + jnp.arange(Lq)[None, :]           # (B, Lq)
+        pages = jnp.take_along_axis(
+            pt, jnp.clip(posn // ps, 0, pt.shape[1] - 1), axis=1)
+        offs = posn % ps
+        ck = cache["kp"].at[pages, offs].set(k.astype(cache["kp"].dtype))
+        cv = cache["vp"].at[pages, offs].set(v.astype(cache["vp"].dtype))
+        new_cache = {"kp": ck, "vp": cv, "ptab": pt}
+        Hk, D = k.shape[-2], k.shape[-1]
+        k = ck[pt].reshape(B, -1, Hk, D)
+        v = cv[pt].reshape(B, -1, Hk, D)
+        kv_len = cpb + Lq
+    elif cache is not None:
         # write the new k/v at cache_pos, attend over the whole cache.
         # cache_pos may be a scalar (shared write offset: prefill, wave
         # decode) or a (B,) vector of per-slot positions (continuous

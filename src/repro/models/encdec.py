@@ -79,14 +79,27 @@ def init_encdec(rng: Array, cfg: ModelConfig) -> Params:
 
 
 def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int,
-                      src_len: int, dtype=jnp.bfloat16) -> Params:
+                      src_len: int, dtype=jnp.bfloat16,
+                      page_size: int = 0, num_pages: int = 0) -> Params:
     """Self KV (n_layers, B, max_len, Hk, D) + decode-invariant cross KV
-    (n_layers, B, src_len, Hk, D), filled by ``encdec_prefill``."""
-    self_shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    (n_layers, B, src_len, Hk, D), filled by ``encdec_prefill``.
+
+    ``page_size > 0`` pages the decoder *self* cache (the only part that
+    grows with decode length); cross K/V is written once per request at a
+    fixed per-slot ``src_len``, so paging it buys nothing.
+    """
+    from repro.models.attention import init_paged_kv_cache
+    if page_size:
+        self_cache = init_paged_kv_cache(cfg, batch, max_len, page_size,
+                                         num_pages, dtype=dtype)
+    else:
+        self_shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                      cfg.head_dim)
+        self_cache = {"k": jnp.zeros(self_shape, dtype),
+                      "v": jnp.zeros(self_shape, dtype)}
     cross_shape = (cfg.n_layers, batch, src_len, cfg.n_kv_heads, cfg.head_dim)
     return {
-        "self": {"k": jnp.zeros(self_shape, dtype),
-                 "v": jnp.zeros(self_shape, dtype)},
+        "self": self_cache,
         "cross": {"k": jnp.zeros(cross_shape, dtype),
                   "v": jnp.zeros(cross_shape, dtype)},
     }

@@ -95,18 +95,28 @@ def init_hybrid_lm(rng: Array, cfg: ModelConfig) -> Params:
 
 
 def init_hybrid_cache(cfg: ModelConfig, batch: int, max_len: int,
-                      dtype=jnp.bfloat16) -> Params:
+                      dtype=jnp.bfloat16, page_size: int = 0,
+                      num_pages: int = 0) -> Params:
     """{"ssm": stacked(n_layers) conv+state, "kv": (n_shared, B, S, Hk, D)}.
 
     KV exists only for the shared slots — the memory shape that makes
-    500k-context decode feasible for this family.
+    500k-context decode feasible for this family.  ``page_size > 0``
+    makes the shared-attention KV paged (pool + page table, see
+    ``attention.init_paged_kv_cache``); the SSM state is O(1) in sequence
+    length and has nothing to page.
     """
+    from repro.models.attention import init_paged_kv_cache
     cache: Params = {"ssm": init_ssm_cache(cfg, batch)}
     n_shared = len(shared_slots(cfg))
     if n_shared:
-        shape = (n_shared, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
-        cache["kv"] = {"k": jnp.zeros(shape, dtype),
-                       "v": jnp.zeros(shape, dtype)}
+        if page_size:
+            cache["kv"] = init_paged_kv_cache(
+                cfg, batch, max_len, page_size, num_pages,
+                n_layers=n_shared, dtype=dtype)
+        else:
+            shape = (n_shared, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            cache["kv"] = {"k": jnp.zeros(shape, dtype),
+                           "v": jnp.zeros(shape, dtype)}
     return cache
 
 
@@ -171,8 +181,7 @@ def hybrid_hidden(params: Params, cfg: ModelConfig, inputs: Array,
     kv_cache = cache.get("kv") if cache is not None else None
 
     new_ssm: list = []
-    new_kv_k: list = []
-    new_kv_v: list = []
+    new_kv: list = []
     for r, (lo, hi) in enumerate(runs):
         # shared attention block before this run (except before run 0
         # unless layer 0 is itself a shared slot)
@@ -180,8 +189,10 @@ def hybrid_hidden(params: Params, cfg: ModelConfig, inputs: Array,
             s = slots.index(lo)
             sp = params["shared"]
             h = L.rmsnorm(sp["ln_attn"], x, cfg.norm_eps)
+            # per-slot layer cache: monolithic {"k","v"} or paged
+            # {"kp","vp","ptab"} — every leaf is stacked over shared slots
             layer_kv = (None if kv_cache is None else
-                        {"k": kv_cache["k"][s], "v": kv_cache["v"][s]})
+                        {name: leaf[s] for name, leaf in kv_cache.items()})
             attn_out, new_layer_kv = attention(
                 sp["attn"], cfg, h, positions,
                 cache=layer_kv, cache_pos=cache_pos,
@@ -191,8 +202,7 @@ def hybrid_hidden(params: Params, cfg: ModelConfig, inputs: Array,
             x = x + L.mlp(sp["mlp"], h, gated=cfg.mlp_gated,
                           sparsity=cfg.mlp_sparsity)
             if new_layer_kv is not None:
-                new_kv_k.append(new_layer_kv["k"])
-                new_kv_v.append(new_layer_kv["v"])
+                new_kv.append(new_layer_kv)
         run_cache = (None if ssm_cache is None
                      else _slice_tree(ssm_cache, lo, hi))
         x, run_new_cache = _scan_run(
@@ -205,8 +215,8 @@ def hybrid_hidden(params: Params, cfg: ModelConfig, inputs: Array,
         new_cache = {"ssm": jax.tree.map(
             lambda *xs: jnp.concatenate(xs, axis=0), *new_ssm)}
         if kv_cache is not None:
-            new_cache["kv"] = {"k": jnp.stack(new_kv_k),
-                               "v": jnp.stack(new_kv_v)}
+            new_cache["kv"] = {name: jnp.stack([kv[name] for kv in new_kv])
+                               for name in new_kv[0]}
 
     x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
     return x, new_cache

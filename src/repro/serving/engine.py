@@ -32,6 +32,17 @@ wave (all through :func:`_device_fetch`, which tests monkeypatch to
 count); per-slot prefill performs none — the first sampled token rides
 back in the next chunk's block.
 
+Paged KV cache (``ServeConfig.page_size > 0``): the cache becomes a
+shared page pool plus a per-slot page table (see ``models.attention``),
+with the ``build_paged_*`` twins of the jitted steps and a host-side
+allocator on ``Server`` — worst-case page *reservation* at admission
+(requests wait instead of OOMing when the pool is overcommitted), lazy
+physical allocation at prefill/chunk boundaries, page recycling and
+table nulling at retirement, per-request prompt buckets, and a decode
+attention view narrowed to the live slots' page bucket.  All of it is
+host arithmetic over already-fetched state: the sync contract above is
+unchanged under paging.
+
 Sampling: greedy or temperature; fully deterministic given the seed.
 """
 
@@ -58,7 +69,7 @@ Array = jax.Array
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     slots: int = 8                  # concurrent sequences (batch)
-    max_len: int = 1024             # cache capacity
+    max_len: int = 1024             # cache capacity (logical, per slot)
     prompt_pad: int = 128           # prompts are padded to this length
     max_new_tokens: int = 64
     decode_chunk: int = 16          # on-device decode steps per host sync
@@ -66,6 +77,48 @@ class ServeConfig:
     eos_token: int = 1
     kv_mode: str = "auto"           # sharding of the KV cache
     seed: int = 0
+    # --- paged KV cache (page_size > 0 switches the cache layout) ---
+    page_size: int = 0              # KV rows per page; 0 → monolithic
+    num_pages: int = 0              # allocatable pool pages; 0 → capacity
+    page_view_chunk: int = 8        # decode view granularity in pages;
+    #                                 0 → always attend the full table
+    #                                 (bit-identical to monolithic)
+    prompt_buckets: int = 0         # >0: pad each prompt to a multiple of
+    #                                 this (≤ prompt_pad) instead of the
+    #                                 uniform prompt_pad — short prompts
+    #                                 then occupy only their own pages
+
+    @property
+    def paged(self) -> bool:
+        return self.page_size > 0
+
+    @property
+    def max_pages(self) -> int:
+        return -(-self.max_len // max(self.page_size, 1))
+
+    @property
+    def pool_pages(self) -> int:
+        """Allocatable pages (excluding the reserved null page)."""
+        if self.num_pages > 0:
+            return self.num_pages
+        return self.slots * self.max_pages
+
+    def prompt_rows(self, prompt_len: int) -> int:
+        """Cache rows a prompt occupies: the uniform ``prompt_pad``, or
+        the request's own bucket when ``prompt_buckets`` is set."""
+        if not self.prompt_buckets:
+            return self.prompt_pad
+        b = self.prompt_buckets
+        return min(self.prompt_pad, -(-max(prompt_len, 1) // b) * b)
+
+    def request_pages(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case pages a request can touch (its admission
+        reservation): positions stay < prompt_rows + max_new (the budget
+        freezes the slot) and < max_len (capacity freezes it).  The
+        single source of the admission math — benchmarks size their
+        demand-fitted pools through this too."""
+        rows = min(self.prompt_rows(prompt_len) + max_new, self.max_len)
+        return -(-rows // self.page_size)
 
 
 @dataclasses.dataclass
@@ -227,6 +280,11 @@ def build_prefill_wave_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
         donate_argnums=(2,))
 
 
+def _fresh_stats() -> Dict[str, Any]:
+    return {"chunk_s": [], "chunk_tokens": [], "prefills": 0,
+            "peak_pages": 0, "admission_waits": 0}
+
+
 def init_decode_state(slots: int) -> Dict[str, Array]:
     """All-free decode state: every slot done, no budget, pos 0."""
     return {
@@ -300,6 +358,108 @@ def build_decode_loop(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
         donate_argnums=(1, 2))
 
 
+def build_paged_prefill_slot_step(cfg: ModelConfig, mesh: Mesh,
+                                  scfg: ServeConfig, abstract_params: Any,
+                                  abstract_cache: Any, prompt_rows: int
+                                  ) -> Callable:
+    """(params, tokens (1, prompt_rows), cache, state, slot, budget, key,
+    page_row (max_pages,)) → (cache, state).
+
+    The paged twin of :func:`build_prefill_slot_step`: the scratch cache
+    *shares* the page pool (``blank_slot_cache``) and gets the slot's
+    host-assigned pages stamped into its table, so prefill scatters the
+    prompt straight into pages no live slot owns; the merge then only
+    writes the slot's page-table row.  ``prompt_rows`` is static — with
+    ``prompt_buckets`` enabled the server compiles one step per bucket
+    and short prompts stop paying full-``prompt_pad`` prefill work.
+    """
+    pspecs = SH.param_specs(abstract_params, cfg, mesh)
+    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
+    bspecs = SH.batch_specs(
+        {"tokens": jax.ShapeDtypeStruct((1, prompt_rows), jnp.int32)}, mesh)
+
+    def step(params, batch, cache, state, slot, budget, key, page_row):
+        scratch = MZ.blank_slot_cache(cache)
+        scratch = MZ.set_page_table(scratch, page_row[None])
+        logits, scratch = MZ.prefill(params, cfg, batch, scratch)
+        cache = MZ.merge_cache_slot(cache, scratch, slot)
+        first = sample_token(logits[:, :cfg.vocab_size], key,
+                             scfg.temperature)[0]
+        state = {
+            "tok": state["tok"].at[slot].set(first),
+            "pos": state["pos"].at[slot].set(prompt_rows),
+            "done": state["done"].at[slot].set(False),
+            "left": state["left"].at[slot].set(budget),
+        }
+        return cache, state
+
+    sspecs = _state_shardings(mesh)
+    return jax.jit(
+        step,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, bspecs),
+                      SH.named(mesh, cspecs), sspecs, None, None, None,
+                      None),
+        out_shardings=(SH.named(mesh, cspecs), sspecs),
+        donate_argnums=(2, 3))
+
+
+def build_paged_decode_loop(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                            abstract_params: Any, abstract_cache: Any,
+                            view_pages: Optional[int] = None) -> Callable:
+    """(params, cache, state, key, ptab (slots, max_pages))
+    → (cache, state, tokens, emitted).
+
+    The paged twin of :func:`build_decode_loop`.  The host-authoritative
+    page table rides in as an argument (host→device only — the
+    one-device-fetch-per-chunk contract is untouched) and is stamped into
+    the cache before the scan, so page allocations and slot retirements
+    made between chunks take effect here.  ``view_pages`` (static)
+    narrows the attention gather to the first N logical pages — the host
+    picks the smallest bucket covering every live slot, so decode
+    attention work tracks actual sequence lengths.  Writes from frozen
+    (done/free) slots whose position lies beyond the view clip into the
+    slot's page-table tail, which retirement has nulled — they land in
+    the garbage page.
+    """
+    pspecs = SH.param_specs(abstract_params, cfg, mesh)
+    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
+    V = cfg.vocab_size
+
+    def loop(params, cache, state, key, ptab):
+        cache = MZ.set_page_table(cache, ptab)
+
+        def body(carry, _):
+            cache, st, key = carry
+            tok, pos = st["tok"], st["pos"]
+            done, left = st["done"], st["left"]
+            emit = (~done) & (left > 0)
+            left = left - emit.astype(left.dtype)
+            done = done | (emit & ((tok == scfg.eos_token) | (left == 0)
+                                   | (pos + 1 >= scfg.max_len)))
+            vcache = MZ.page_view(cache, view_pages)
+            logits, vcache = MZ.decode_step(params, cfg, tok, vcache, pos)
+            cache = MZ.unpage_view(vcache, cache)
+            key, sk = jax.random.split(key)
+            nxt = sample_token(logits[:, :V], sk, scfg.temperature)
+            alive = ~done
+            st = {"tok": jnp.where(alive, nxt, tok),
+                  "pos": jnp.where(alive, pos + 1, pos),
+                  "done": done, "left": left}
+            return (cache, st, key), (tok, emit)
+
+        (cache, state, _), (tokens, emitted) = jax.lax.scan(
+            body, (cache, state, key), None, length=scfg.decode_chunk)
+        return cache, state, tokens, emitted
+
+    sspecs = _state_shardings(mesh)
+    return jax.jit(
+        loop,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, cspecs),
+                      sspecs, None, None),
+        out_shardings=(SH.named(mesh, cspecs), sspecs, None, None),
+        donate_argnums=(1, 2))
+
+
 # ---------------------------------------------------------------------------
 # Scheduler
 # ---------------------------------------------------------------------------
@@ -327,8 +487,7 @@ class Server:
         self._uid = itertools.count()
         self._key = jax.random.key(scfg.seed)
         self.sync_count = 0
-        self.stats: Dict[str, List] = {"chunk_s": [], "chunk_tokens": [],
-                                       "prefills": 0}
+        self.stats: Dict[str, Any] = _fresh_stats()
 
         abstract_params = jax.eval_shape(lambda: params)
         # kernel/mode/blocks resolved per packed weight at each phase's
@@ -343,37 +502,173 @@ class Server:
         self.decode_plan = dispatch.plan_params(params, M=scfg.slots)
         self.dispatch_plan = self.prefill_plan          # back-compat alias
         self._abstract_cache = jax.eval_shape(
-            lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len))
+            lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len,
+                                  page_size=scfg.page_size,
+                                  num_pages=scfg.pool_pages))
         cspecs = SH.cache_specs(self._abstract_cache, cfg, mesh,
                                 kv_mode=scfg.kv_mode)
         # hoisted: jitted once here, not per wave inside the serve loop
         self._init_cache = jax.jit(
-            lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len),
+            lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len,
+                                  page_size=scfg.page_size,
+                                  num_pages=scfg.pool_pages),
             out_shardings=SH.named(mesh, cspecs))
-        self._prefill_slot = build_prefill_slot_step(
-            cfg, mesh, scfg, abstract_params, self._abstract_cache)
-        self._prefill_wave = build_prefill_wave_step(
-            cfg, mesh, scfg, abstract_params, self._abstract_cache)
-        self._decode_loop = build_decode_loop(
-            cfg, mesh, scfg, abstract_params, self._abstract_cache)
+        self._abstract_params = abstract_params
+        if scfg.paged:
+            # both plans additionally carry the paged-attention decision
+            # (its own page-shaped dispatch/autotune key)
+            pa = dispatch.plan_paged_attention(
+                cfg, batch=scfg.slots, page_size=scfg.page_size,
+                max_pages=scfg.max_pages)
+            self.prefill_plan = self.prefill_plan + [pa]
+            self.decode_plan = self.decode_plan + [pa]
+            # compiled paged steps are keyed by static geometry: prefill
+            # by prompt_rows bucket, decode by view-pages bucket
+            self._paged_prefill_steps: Dict[int, Callable] = {}
+            self._paged_decode_loops: Dict[Optional[int], Callable] = {}
+            self._free_pages: List[int] = list(range(scfg.pool_pages, 0, -1))
+            self._reserved = 0
+            self._slot_pages: List[List[int]] = [[] for _ in
+                                                 range(scfg.slots)]
+            self._slot_need = [0] * scfg.slots
+            self._slot_rows = [0] * scfg.slots
+            self._ptab = np.zeros((scfg.slots, scfg.max_pages), np.int32)
+        else:
+            self._prefill_slot = build_prefill_slot_step(
+                cfg, mesh, scfg, abstract_params, self._abstract_cache)
+            self._prefill_wave = build_prefill_wave_step(
+                cfg, mesh, scfg, abstract_params, self._abstract_cache)
+            self._decode_loop = build_decode_loop(
+                cfg, mesh, scfg, abstract_params, self._abstract_cache)
+
+    def reset_stats(self) -> None:
+        """Zero the serving counters (benchmarks call this after their
+        compile warm-up pass)."""
+        self.sync_count = 0
+        self.stats = _fresh_stats()
+
+    def cache_bytes(self) -> int:
+        """Allocated KV/state cache footprint in bytes (the buffers
+        ``init_cache`` materializes — pool + tables for paged, the full
+        ``slots × max_len`` block for monolithic)."""
+        return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree.leaves(self._abstract_cache))
 
     def submit(self, prompt: np.ndarray,
                max_new: Optional[int] = None) -> int:
         req = Request(uid=next(self._uid),
                       prompt=np.asarray(prompt, np.int32),
                       max_new=max_new or self.scfg.max_new_tokens)
+        if self.scfg.paged:
+            need = self.scfg.request_pages(len(req.prompt), req.max_new)
+            if need > self.scfg.pool_pages:
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self.scfg.pool_pages} — raise num_pages")
         self.queue.append(req)
         return req.uid
 
-    def _pad_prompt(self, r: Request) -> np.ndarray:
-        scfg = self.scfg
-        tokens = np.zeros((1, scfg.prompt_pad), np.int32)
-        L = min(len(r.prompt), scfg.prompt_pad)
-        tokens[0, scfg.prompt_pad - L:] = r.prompt[-L:]        # left-pad
+    def _pad_prompt(self, r: Request, rows: Optional[int] = None
+                    ) -> np.ndarray:
+        width = rows or self.scfg.prompt_pad
+        tokens = np.zeros((1, width), np.int32)
+        L = min(len(r.prompt), width)
+        tokens[0, width - L:] = r.prompt[-L:]                  # left-pad
         return tokens
+
+    # --- paged bookkeeping (host side) -----------------------------------
+
+    def _alloc_pages(self, i: int, target: int) -> None:
+        """Grow slot ``i``'s page list to ``target`` pages: pop from the
+        free list, write the host table row, track the pool high-water
+        mark.  The admission reservation guarantees the free list can
+        serve every call."""
+        while len(self._slot_pages[i]) < target:
+            page = self._free_pages.pop()
+            self._ptab[i, len(self._slot_pages[i])] = page
+            self._slot_pages[i].append(page)
+        in_use = self.scfg.pool_pages - len(self._free_pages)
+        self.stats["peak_pages"] = max(self.stats["peak_pages"], in_use)
+
+    def _ensure_pages(self, i: int) -> None:
+        """Cover the next decode chunk (allocation happens at chunk
+        boundaries, never mid-scan), capped at the slot's reservation."""
+        scfg = self.scfg
+        self._alloc_pages(i, min(
+            -(-min(self._slot_rows[i] + scfg.decode_chunk,
+                   scfg.max_len) // scfg.page_size),
+            self._slot_need[i]))
+
+    def _retire_slot(self, i: int) -> None:
+        """Return slot ``i``'s pages to the pool and null its table row —
+        the next chunk's table refresh redirects the dead slot's residual
+        writes to the garbage page, so recycled pages can't be
+        corrupted."""
+        self._free_pages.extend(reversed(self._slot_pages[i]))
+        self._slot_pages[i] = []
+        self._reserved -= self._slot_need[i]
+        self._slot_need[i] = 0
+        self._slot_rows[i] = 0
+        self._ptab[i] = 0
+
+    def _paged_prefill_step(self, rows: int) -> Callable:
+        fn = self._paged_prefill_steps.get(rows)
+        if fn is None:
+            fn = build_paged_prefill_slot_step(
+                self.cfg, self.mesh, self.scfg, self._abstract_params,
+                self._abstract_cache, rows)
+            self._paged_prefill_steps[rows] = fn
+        return fn
+
+    def _paged_decode_loop(self, view: Optional[int]) -> Callable:
+        fn = self._paged_decode_loops.get(view)
+        if fn is None:
+            fn = build_paged_decode_loop(
+                self.cfg, self.mesh, self.scfg, self._abstract_params,
+                self._abstract_cache, view_pages=view)
+            self._paged_decode_loops[view] = fn
+        return fn
+
+    def _view_pages(self, live_rows: int) -> Optional[int]:
+        """Decode view bucket covering ``live_rows`` cache rows."""
+        scfg = self.scfg
+        if not scfg.page_view_chunk:
+            return None
+        vc = scfg.page_view_chunk
+        pages = -(-live_rows // scfg.page_size)
+        vp = -(-pages // vc) * vc
+        return min(vp, scfg.max_pages)
+
+    def _collect_chunk(self, blk, emit, done, slot_req, dt) -> None:
+        """Distribute one fetched ``(decode_chunk, slots)`` token block,
+        record the chunk stats, and retire finished slots — the shared
+        post-fetch half of both serve loops.  In paged mode emitted
+        tokens advance the slot's position upper bound and retirement
+        returns the slot's pages."""
+        scfg = self.scfg
+        n_emitted = 0
+        for t in range(scfg.decode_chunk):
+            for i in range(scfg.slots):
+                if emit[t, i] and slot_req[i] is not None:
+                    slot_req[i].out.append(int(blk[t, i]))
+                    n_emitted += 1
+                    if scfg.paged:
+                        # pos advances at most once per emitted token
+                        self._slot_rows[i] += 1
+        self.stats["chunk_s"].append(dt)
+        self.stats["chunk_tokens"].append(n_emitted)
+        for i in range(scfg.slots):
+            if slot_req[i] is not None and done[i]:
+                slot_req[i].done = True
+                self.finished.append(slot_req[i])
+                slot_req[i] = None
+                if scfg.paged:
+                    self._retire_slot(i)
 
     def run(self) -> List[Request]:
         """Serve until the queue drains; returns finished requests."""
+        if self.scfg.paged:
+            return self._run_paged()
         scfg = self.scfg
         slot_req: List[Optional[Request]] = [None] * scfg.slots
         with self.mesh:
@@ -425,17 +720,74 @@ class Server:
                     (tokens, emitted, state["done"]))
                 dt = time.perf_counter() - t0
                 self.sync_count += 1
-                n_emitted = 0
-                for t in range(scfg.decode_chunk):
-                    for i in range(scfg.slots):
-                        if emit[t, i] and slot_req[i] is not None:
-                            slot_req[i].out.append(int(blk[t, i]))
-                            n_emitted += 1
-                self.stats["chunk_s"].append(dt)
-                self.stats["chunk_tokens"].append(n_emitted)
+                self._collect_chunk(blk, emit, done, slot_req, dt)
+        return self.finished
+
+    def _run_paged(self) -> List[Request]:
+        """The paged serve loop.
+
+        Same skeleton as the monolithic path — admit into free slots,
+        run one decode chunk, fetch one token block — plus the host side
+        of paging: FIFO admission gated on a worst-case page
+        *reservation* (a request is only admitted when the pool can
+        cover it to completion, so live slots can never starve
+        mid-decode), physical pages handed out lazily at prefill and at
+        chunk boundaries (``_ensure_pages``), pages returned and the
+        table row nulled at retirement, and the decode view narrowed to
+        the live slots' bucket.  Everything here is host arithmetic on
+        already-fetched state: the sync contract stays one
+        ``_device_fetch`` per chunk, and refills stay sync-free.
+        """
+        scfg = self.scfg
+        slot_req: List[Optional[Request]] = [None] * scfg.slots
+        with self.mesh:
+            cache = self._init_cache()
+            state = init_decode_state(scfg.slots)
+            while self.queue or any(slot_req):
                 for i in range(scfg.slots):
-                    if slot_req[i] is not None and done[i]:
-                        slot_req[i].done = True
-                        self.finished.append(slot_req[i])
-                        slot_req[i] = None
+                    if slot_req[i] is not None or not self.queue:
+                        continue
+                    r = self.queue[0]
+                    rows = scfg.prompt_rows(len(r.prompt))
+                    need = scfg.request_pages(len(r.prompt), r.max_new)
+                    if self._reserved + need > scfg.pool_pages:
+                        # head-of-line blocking keeps FIFO fairness: the
+                        # next retirement frees this request's pages
+                        self.stats["admission_waits"] += 1
+                        break
+                    self.queue.pop(0)
+                    self._reserved += need
+                    self._slot_need[i] = need
+                    self._slot_rows[i] = rows
+                    self._ptab[i] = 0
+                    self._alloc_pages(i, -(-rows // scfg.page_size))
+                    self._key, sk = jax.random.split(self._key)
+                    cache, state = self._paged_prefill_step(rows)(
+                        self.params,
+                        {"tokens": jnp.asarray(self._pad_prompt(r, rows))},
+                        cache, state, jnp.asarray(i, jnp.int32),
+                        jnp.asarray(r.max_new, jnp.int32), sk,
+                        jnp.asarray(self._ptab[i]))
+                    slot_req[i] = r
+                    self.stats["prefills"] += 1
+                if not any(slot_req):
+                    break
+                live_rows = 0
+                for i in range(scfg.slots):
+                    if slot_req[i] is not None:
+                        self._ensure_pages(i)
+                        live_rows = max(live_rows,
+                                        min(self._slot_rows[i]
+                                            + scfg.decode_chunk,
+                                            scfg.max_len))
+                loop = self._paged_decode_loop(self._view_pages(live_rows))
+                self._key, sk = jax.random.split(self._key)
+                t0 = time.perf_counter()
+                cache, state, tokens, emitted = loop(
+                    self.params, cache, state, sk, jnp.asarray(self._ptab))
+                blk, emit, done = _device_fetch(
+                    (tokens, emitted, state["done"]))
+                dt = time.perf_counter() - t0
+                self.sync_count += 1
+                self._collect_chunk(blk, emit, done, slot_req, dt)
         return self.finished

@@ -1,0 +1,101 @@
+"""benchmarks/perf_trend.py: the blocking gate must tolerate rows that
+exist in only one of {baseline, current} (a new benchmark's first run
+can't fail the job that will track it), and still catch regressions."""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.perf_trend import compare, main  # noqa: E402
+
+
+def record(serving_rows=None, kernel_rows=None):
+    sections = {}
+    if serving_rows is not None:
+        sections["serving"] = {"data": {"rows": serving_rows}}
+    if kernel_rows is not None:
+        sections["kernels"] = {"data": {"rows": kernel_rows}}
+    return {"sections": sections}
+
+
+def srow(config, slots, tps):
+    return {"config": config, "slots": slots, "tok_per_s": tps}
+
+
+class TestOneSidedRows:
+    def test_new_row_in_current_does_not_block(self):
+        base = record(serving_rows=[srow("dense", 8, 100.0)])
+        cur = record(serving_rows=[srow("dense", 8, 101.0),
+                                   srow("het-paged", 8, 500.0)])
+        lines, regressions = compare(base, cur, 0.30)
+        assert regressions == []
+        assert any("new row" in ln for ln in lines)
+
+    def test_row_only_in_baseline_does_not_block(self):
+        base = record(serving_rows=[srow("dense", 8, 100.0),
+                                    srow("retired", 8, 50.0)])
+        cur = record(serving_rows=[srow("dense", 8, 99.0)])
+        lines, regressions = compare(base, cur, 0.30)
+        assert regressions == []
+        assert any("absent from current" in ln for ln in lines)
+
+    def test_row_missing_metric_is_skipped(self):
+        base = record(serving_rows=[srow("dense", 8, 100.0)])
+        cur = record(serving_rows=[{"config": "dense", "slots": 8},
+                                   {"config": "x", "slots": 1,
+                                    "tok_per_s": "n/a"}])
+        _, regressions = compare(base, cur, 0.30)
+        assert regressions == []
+
+    def test_section_missing_entirely(self):
+        base = record(serving_rows=[srow("dense", 8, 100.0)],
+                      kernel_rows=[{"kernel": "nm_spmm", "us": 10.0}])
+        cur = record(kernel_rows=[{"kernel": "nm_spmm", "us": 9.0}])
+        _, regressions = compare(base, cur, 0.30)
+        assert regressions == []
+
+
+class TestGateStillBites:
+    def test_regression_detected(self):
+        base = record(serving_rows=[srow("dense", 8, 100.0)])
+        cur = record(serving_rows=[srow("dense", 8, 50.0)])
+        lines, regressions = compare(base, cur, 0.30)
+        assert len(regressions) == 1
+        assert any("REGRESSION" in ln for ln in lines)
+
+    def test_kernel_us_higher_is_worse(self):
+        base = record(kernel_rows=[{"kernel": "nm_spmm", "us": 10.0}])
+        cur = record(kernel_rows=[{"kernel": "nm_spmm", "us": 20.0}])
+        _, regressions = compare(base, cur, 0.30)
+        assert len(regressions) == 1
+
+    def test_within_threshold_passes(self):
+        base = record(serving_rows=[srow("dense", 8, 100.0)])
+        cur = record(serving_rows=[srow("dense", 8, 80.0)])
+        _, regressions = compare(base, cur, 0.30)
+        assert regressions == []
+
+
+class TestMainExitCodes:
+    def test_missing_baseline_passes(self, tmp_path):
+        cur = tmp_path / "cur.json"
+        cur.write_text(json.dumps(record(serving_rows=[srow("d", 8, 1.0)])))
+        assert main(["--baseline", str(tmp_path / "nope.json"),
+                     "--current", str(cur)]) == 0
+
+    def test_regression_fails(self, tmp_path):
+        base, cur = tmp_path / "b.json", tmp_path / "c.json"
+        base.write_text(json.dumps(record(serving_rows=[srow("d", 8, 100.0)])))
+        cur.write_text(json.dumps(record(serving_rows=[srow("d", 8, 10.0)])))
+        assert main(["--baseline", str(base), "--current", str(cur)]) == 1
+
+    def test_first_run_of_new_bench_passes(self, tmp_path):
+        """A baseline from before a benchmark existed must not block the
+        benchmark's first tracked run."""
+        base, cur = tmp_path / "b.json", tmp_path / "c.json"
+        base.write_text(json.dumps(record(serving_rows=[srow("d", 8, 100.0)])))
+        cur.write_text(json.dumps(record(
+            serving_rows=[srow("d", 8, 100.0), srow("het-paged", 8, 1.0)])))
+        assert main(["--baseline", str(base), "--current", str(cur)]) == 0

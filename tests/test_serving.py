@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import reference_decode
 from repro import models as MZ
 from repro.kernels import dispatch
 from repro.core.sparse_linear import SparsityConfig, pack_params
@@ -23,30 +24,6 @@ def mesh11():
 @pytest.fixture(scope="module")
 def params():
     return MZ.init_model(jax.random.key(0), TINY)
-
-
-def reference_decode(params, cfg, prompt, max_new, eos, prompt_pad, max_len):
-    """1-token-at-a-time greedy oracle for ONE request: batch-1 prefill,
-    one decode_step + one host sync per token — seed-engine semantics."""
-    prompts = np.zeros((1, prompt_pad), np.int32)
-    L = min(len(prompt), prompt_pad)
-    prompts[0, prompt_pad - L:] = prompt[-L:]
-    cache = MZ.init_cache(cfg, 1, max_len)
-    logits, cache = MZ.prefill(params, cfg,
-                               {"tokens": jnp.asarray(prompts)}, cache)
-    tok = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
-    out = []
-    pos = prompt_pad
-    for t in range(max_new):
-        tk = int(tok[0])
-        out.append(tk)
-        if tk == eos or t == max_new - 1 or pos + 1 >= max_len:
-            break
-        logits, cache = MZ.decode_step(params, cfg, tok, cache,
-                                       jnp.asarray(pos))
-        tok = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
-        pos += 1
-    return out
 
 
 class TestSampling:
