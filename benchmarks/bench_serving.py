@@ -29,6 +29,20 @@ flight), ``kv_ratio`` (mono/paged allocated bytes) and
 ``speedup_vs_mono`` — PR 3's acceptance gate reads kv_ratio ≥ 2 or
 speedup ≥ 1.3.
 
+The **speculative rows** (``spec-k{2,4,8}`` self-draft, ``spec-k4-pack``
+nm-sparse draft) serve the same heterogeneous mix through the paged
+speculative loop: each decode step drafts k tokens per slot and verifies
+the whole ``(slots, k+1)`` block in ONE dense forward.  Reported per
+row: ``tok_per_s``, ``acceptance_rate`` (accepted/drafted — 1.0 for the
+self-draft by construction, the honest measured rate for the sparse
+draft), ``p50_ms``/``p95_ms`` and ``speedup_vs_paged`` (vs the het-paged
+baseline).  tok/s scales with acceptance: the self-draft rows isolate
+the amortized-dense-cost ceiling of this host (every draft still costs
+a forward on the CPU ref path — the sparse draft only wins where a
+drafted token is cheaper than a dense one, i.e. on bandwidth-bound
+accelerators running the packed kernels), the pack row shows what a
+real sparse draft's acceptance does to it.
+
 Shapes shrink under ``REPRO_BENCH_SMOKE=1`` (the CI smoke step) so one
 pass stays in seconds.
 """
@@ -117,6 +131,9 @@ def _requests(rng, n):
                          ).astype(np.int32) for _ in range(n)]
 
 
+SPEC_KS = (2, 4) if SMOKE else (2, 4, 8)
+
+
 def _serve_chunked(cfg, mesh, params, slots, requests, scfg=None,
                    warm_all=False, max_new=None):
     scfg = scfg or ServeConfig(
@@ -158,7 +175,8 @@ def _serve_chunked(cfg, mesh, params, slots, requests, scfg=None,
             "syncs": server.sync_count, "wall_s": wall,
             "kv_bytes": server.cache_bytes(),
             "peak_used_bytes": page_bytes_used,
-            "admission_waits": server.stats["admission_waits"]}
+            "admission_waits": server.stats["admission_waits"],
+            "acceptance_rate": server.acceptance_rate()}
 
 
 def _serve_per_token(cfg, mesh, params, slots, requests):
@@ -249,6 +267,51 @@ def _het_scenario(mesh) -> list:
     ]
 
 
+def _spec_scenario(mesh, paged_tok_per_s: float) -> list:
+    """Speculative serving of the heterogeneous mix vs the paged
+    baseline: ``spec-k{K}`` rows self-draft (acceptance ≈ 1 — the
+    amortized-dense-cost ceiling), ``spec-k4-pack`` drafts with the
+    nm-packed weights against the dense verifier (the paper's
+    sparse/dense split; acceptance is whatever the pack earns)."""
+    import dataclasses
+    rng = np.random.default_rng(1)
+    requests = [rng.integers(1, VOCAB, size=L).astype(np.int32)
+                for L in HET_LENS]
+    pool = dataclasses.replace(_het_scfg(), num_pages=_het_pool_pages())
+
+    def spec_serve(cfg, params, k, draft):
+        # decode_chunk counts verify steps: scale it down so tokens per
+        # host sync stay ≈ the baseline's (otherwise most of a chunk
+        # runs masked once every slot's budget is spent)
+        chunk = max(1, -(-HET_CHUNK // (k + 1)))
+        scfg = dataclasses.replace(pool, spec_k=k, spec_draft=draft,
+                                   decode_chunk=chunk)
+        out = _serve_chunked(cfg, mesh, params, HET_SLOTS, requests,
+                             scfg=scfg, warm_all=True)
+        return {"slots": HET_SLOTS, "tokens": out["tokens"],
+                "tok_per_s": round(out["tok_per_s"], 1),
+                "acceptance_rate": round(out["acceptance_rate"], 3),
+                "p50_ms": round(out["p50_ms"], 3),
+                "p95_ms": round(out["p95_ms"], 3),
+                "syncs": out["syncs"],
+                "speedup_vs_paged": round(
+                    out["tok_per_s"] / max(paged_tok_per_s, 1e-9), 2)}
+
+    cfg, params = _model("dense")
+    rows = [{"config": f"spec-k{k}", **spec_serve(cfg, params, k, "self")}
+            for k in SPEC_KS]
+    # real sparse draft: dense verify weights, nm-packed draft of the
+    # same weights (spec_draft="pack" packs per the model config)
+    dense_cfg = ModelConfig(
+        name="bench-spec-nm", n_layers=N_LAYERS, d_model=D_MODEL,
+        vocab_size=VOCAB, n_heads=4, n_kv_heads=2, d_ff=D_FF, remat=False,
+        mlp_sparsity=SPARSITY["nm"])
+    dense_params = MZ.init_model(jax.random.key(0), dense_cfg)
+    rows.append({"config": "spec-k4-pack",
+                 **spec_serve(dense_cfg, dense_params, 4, "pack")})
+    return rows
+
+
 def run() -> dict:
     rng = np.random.default_rng(0)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
@@ -270,11 +333,16 @@ def run() -> dict:
                 "speedup": round(chunked["tok_per_s"]
                                  / max(ref["tok_per_s"], 1e-9), 2),
             })
-    rows.extend(_het_scenario(mesh))
+    het_rows = _het_scenario(mesh)
+    rows.extend(het_rows)
+    paged_tps = next(r["tok_per_s"] for r in het_rows
+                     if r["config"] == "het-paged")
+    rows.extend(_spec_scenario(mesh, paged_tps))
     return {"rows": rows, "decode_chunk": DECODE_CHUNK, "max_new": MAX_NEW,
             "het": {"lens": HET_LENS, "page_size": HET_PAGE,
                     "max_len": HET_MAX_LEN, "pool_pages": _het_pool_pages(),
                     "max_new": HET_MAX_NEW},
+            "spec_ks": list(SPEC_KS),
             "backend": jax.default_backend()}
 
 
@@ -287,7 +355,7 @@ def main(out=None) -> None:
     print("config,slots,tokens,tok_per_s,p50_ms,p95_ms,syncs,"
           "ref_tok_per_s,speedup")
     for r in out["rows"]:
-        if r["config"].startswith("het-"):
+        if r["config"].startswith(("het-", "spec-")):
             continue
         print(f"{r['config']},{r['slots']},{r['tokens']},"
               f"{r['tok_per_s']},{r['p50_ms']},{r['p95_ms']},{r['syncs']},"
@@ -308,6 +376,18 @@ def main(out=None) -> None:
                   f"{r['syncs']},{r['kv_mb']},{r.get('peak_used_mb', '')},"
                   f"{r.get('kv_ratio', '')},{r.get('speedup_vs_mono', '')},"
                   f"{r.get('admission_waits', '')}")
+    spec = [r for r in out["rows"] if r["config"].startswith("spec-")]
+    if spec:
+        print(f"# speculative serving on the heterogeneous mix — "
+              f"k drafts (self or nm-packed) + one dense block verify "
+              f"per step, vs het-paged")
+        print("config,slots,tokens,tok_per_s,acceptance_rate,p50_ms,"
+              "p95_ms,syncs,speedup_vs_paged")
+        for r in spec:
+            print(f"{r['config']},{r['slots']},{r['tokens']},"
+                  f"{r['tok_per_s']},{r['acceptance_rate']},"
+                  f"{r['p50_ms']},{r['p95_ms']},{r['syncs']},"
+                  f"{r['speedup_vs_paged']}")
 
 
 if __name__ == "__main__":

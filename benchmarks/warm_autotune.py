@@ -32,11 +32,20 @@ from repro.kernels import dispatch
 from repro.kernels.dispatch import PACK_TYPES
 
 
+SPEC_KS = (2, 4, 8)     # verify-block depths the spec rows serve at
+
+
 def _serving_ms(slots: int, prompt_pad: int, interpret: bool) -> List[int]:
-    """The Ms the engine plans at.  Interpret mode (CPU) skips the wave
-    geometry — interpreting a ``slots*prompt_pad``-row sweep takes
-    minutes and times nothing real."""
+    """The Ms the engine plans at.  Besides the per-slot decode and
+    refill geometries this includes the speculative *verify* shapes —
+    ``M = slots*(k+1)`` for k ∈ SPEC_KS — so a ``spec_k`` server's one
+    batched dense verify hits a warm cache row too (they are
+    decode-shaped small-M keys, cheap to sweep even in interpret mode).
+    Interpret mode (CPU) skips only the wave geometry — interpreting a
+    ``slots*prompt_pad``-row sweep takes minutes and times nothing
+    real."""
     ms = {slots, prompt_pad}
+    ms.update(slots * (k + 1) for k in SPEC_KS)
     if not interpret:
         ms.add(slots * prompt_pad)
     return sorted(ms)
@@ -118,19 +127,21 @@ def run(slots: int = 8, prompt_pad: int = 128, reps: int = 1) -> dict:
     cfg = ModelConfig(name="warm-paged", n_layers=1, d_model=64,
                       vocab_size=256, n_heads=4, n_kv_heads=2, d_ff=128)
     mp = -(-HET_MAX_LEN // HET_PAGE)
-    kv = PagedKV(
-        jnp.zeros((slots * mp + 1, HET_PAGE, cfg.n_kv_heads,
-                   cfg.head_dim), jnp.bfloat16),
-        jnp.zeros((slots * mp + 1, HET_PAGE, cfg.n_kv_heads,
-                   cfg.head_dim), jnp.bfloat16),
-        jnp.zeros((slots, mp), jnp.int32),
-        jnp.full((slots,), HET_PAGE, jnp.int32))
-    q = jnp.zeros((slots, cfg.n_heads, cfg.head_dim), jnp.bfloat16)
-    d = dispatch.SparsityDescriptor.of(kv)
-    key = dispatch.cache_key("paged_attention", slots, d, mode)
-    was_cached = cache.get(key) is not None
-    blocks = dispatch.tune(q, kv, mode=mode, reps=reps)
-    entries.append({"key": key, "blocks": blocks, "cached": was_cached})
+    pool = jnp.zeros((slots * mp + 1, HET_PAGE, cfg.n_kv_heads,
+                      cfg.head_dim), jnp.bfloat16)
+    # decode geometry (one query per slot) plus the speculative verify
+    # geometries (slots*(k+1) queries) — plan keys carry M, so each
+    # depth is its own cache row
+    for m in [slots] + [slots * (k + 1) for k in SPEC_KS]:
+        kv = PagedKV(pool, pool,
+                     jnp.zeros((m, mp), jnp.int32),
+                     jnp.full((m,), HET_PAGE, jnp.int32))
+        q = jnp.zeros((m, cfg.n_heads, cfg.head_dim), jnp.bfloat16)
+        d = dispatch.SparsityDescriptor.of(kv)
+        key = dispatch.cache_key("paged_attention", m, d, mode)
+        was_cached = cache.get(key) is not None
+        blocks = dispatch.tune(q, kv, mode=mode, reps=reps)
+        entries.append({"key": key, "blocks": blocks, "cached": was_cached})
     return {"entries": entries, "mode": mode, "wall_s": time.time() - t0,
             "cache_path": cache.path, "cache_size": len(cache)}
 

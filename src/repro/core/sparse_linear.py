@@ -196,6 +196,24 @@ def pack_params(params: Any, cfg: Any) -> Any:
     return jax.tree_util.tree_map_with_path(rule, params)
 
 
+def make_draft_params(params: Any, cfg: Any) -> Any:
+    """The sparse *drafter* half of speculative serving: prune+pack the
+    verify params into the model config's per-family sparse formats.
+
+    Memory contract: only weights a :class:`SparsityConfig` actually
+    governs are re-materialized as packs — every other leaf (embeddings,
+    norms, dense-format families, geometry misfits) is returned **by
+    reference**, so carrying both draft and verify params through one
+    ``ServeConfig`` costs the packed values (≈ ``1 - n/m`` of the packed
+    weights), not a second model copy; the KV cache is shared outright
+    (the verify block re-writes drafted rows, see ``serving.engine``).
+
+    A config whose sparsity families are all ``dense`` yields the input
+    pytree unchanged — spec_draft="pack" then degenerates to self-draft.
+    """
+    return pack_params(params, cfg)
+
+
 # ---------------------------------------------------------------------------
 # Abstract (ShapeDtypeStruct) packs for the dry-run
 # ---------------------------------------------------------------------------

@@ -59,7 +59,7 @@ class PagedKV(NamedTuple):
         return self.k.shape[3]
 
 
-def _make_kernel(ps: int, g: int, n_pages: int, scale: float):
+def _make_kernel(ps: int, g: int, nq: int, n_pages: int, scale: float):
     def kernel(ptab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
                m_ref, l_ref, acc_ref):
         b = pl.program_id(0)
@@ -71,18 +71,22 @@ def _make_kernel(ps: int, g: int, n_pages: int, scale: float):
             l_ref[...] = jnp.zeros_like(l_ref)
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
-        qv = q_ref[0, 0].astype(jnp.float32)            # (g, D)
+        qv = q_ref[0, 0].astype(jnp.float32)            # (nq*g, D)
         kv = k_ref[0].astype(jnp.float32)               # (ps, D)
         s = jax.lax.dot_general(
             qv, kv, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale  # (g, ps)
-        kpos = j * ps + jax.lax.iota(jnp.int32, ps)
-        valid = kpos < lens_ref[b]
-        s = jnp.where(valid[None, :], s, NEG_INF)
+            preferred_element_type=jnp.float32) * scale  # (nq*g, ps)
+        kpos = j * ps + jax.lax.broadcasted_iota(
+            jnp.int32, (nq * g, ps), 1)
+        # decode block: query row r (= qi*g + gi) sits at position
+        # lens - nq + qi, so its causal reach is kpos < lens - (nq-1-qi)
+        qi = jax.lax.broadcasted_iota(jnp.int32, (nq * g, ps), 0) // g
+        valid = kpos < lens_ref[b] - (nq - 1) + qi
+        s = jnp.where(valid, s, NEG_INF)
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        p = jnp.where(valid[None, :], jnp.exp(s - m_new), 0.0)
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
@@ -106,12 +110,19 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     interpret: bool = False) -> jax.Array:
     """``q (B, H, D) × pools (P, ps, Hk, D) × ptab (B, np) → (B, H, D)``.
 
-    One query per sequence (decode shape); ``H`` a multiple of ``Hk``
-    (GQA — head groups fold into the q/out blocks, no materialized
-    repeat).  The grid is page-shaped: ``(B, Hk, np)`` with one pool page
-    per innermost step, fetched through the prefetched page table.
+    One query per sequence (decode shape), or ``q (B, Q, H, D)`` — the
+    *decode-shaped block* of the speculative verify step: Q queries per
+    sequence at positions ``lens - Q .. lens - 1``, each with its own
+    causal length mask (query rows fold next to the GQA head groups in
+    the q/out blocks, so the grid stays page-shaped).  ``H`` a multiple
+    of ``Hk`` (GQA — no materialized repeat).  The grid is
+    ``(B, Hk, np)`` with one pool page per innermost step, fetched
+    through the prefetched page table.
     """
-    B, H, D = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, nq, H, D = q.shape
     P, ps, Hk, Dk = k_pool.shape
     if D != Dk:
         raise ValueError(f"head_dim mismatch: q {D} vs pool {Dk}")
@@ -121,7 +132,10 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     n_pages = ptab.shape[1]
     s = scale if scale is not None else D ** -0.5
 
-    qf = q.reshape(B, Hk, g, D)
+    # (B, nq, Hk, g, D) → (B, Hk, nq*g, D): query rows sit qi-major next
+    # to the head group so one q block serves the whole (b, h) cell
+    qf = q.reshape(B, nq, Hk, g, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, Hk, nq * g, D)
     # (head, page)-addressable pools: page ptab[b, j] of head h lives at
     # flat row h * P + ptab[b, j]
     kf = k_pool.transpose(2, 0, 1, 3).reshape(Hk * P, ps, D)
@@ -136,26 +150,28 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         num_scalar_prefetch=2,                       # ptab, lens
         grid=(B, Hk, n_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, g, D),
+            pl.BlockSpec((1, 1, nq * g, D),
                          lambda b, h, j, pt, ln: (b, h, 0, 0)),
             pl.BlockSpec((1, ps, D), kv_map),
             pl.BlockSpec((1, ps, D), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, D),
+        out_specs=pl.BlockSpec((1, 1, nq * g, D),
                                lambda b, h, j, pt, ln: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),         # running max
-            pltpu.VMEM((g, 1), jnp.float32),         # running denom
-            pltpu.VMEM((g, D), jnp.float32),         # output accumulator
+            pltpu.VMEM((nq * g, 1), jnp.float32),    # running max
+            pltpu.VMEM((nq * g, 1), jnp.float32),    # running denom
+            pltpu.VMEM((nq * g, D), jnp.float32),    # output accumulator
         ],
     )
     out = pl.pallas_call(
-        _make_kernel(ps, g, n_pages, s),
+        _make_kernel(ps, g, nq, n_pages, s),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hk, g, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, nq * g, D), q.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
                                  pltpu.ARBITRARY)),
         interpret=interpret,
     )(ptab, lens, qf, kf, vf)
-    return out.reshape(B, H, D)
+    out = out.reshape(B, Hk, nq, g, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, nq, H, D)
+    return out[:, 0] if squeeze else out

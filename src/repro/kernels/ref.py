@@ -115,19 +115,25 @@ def paged_attention_ref(q: Array, k_pool: Array, v_pool: Array,
                         scale: float | None = None) -> Array:
     """Decode attention against a paged KV cache.
 
-    ``q (B, H, D)`` — one query per sequence (the token being decoded);
+    ``q`` — ``(B, H, D)``: one query per sequence (the token being
+    decoded), or ``(B, Q, H, D)``: a *decode-shaped block* of Q queries
+    (the speculative-verify posture — query ``i`` sits at position
+    ``lens - Q + i``, so each query gets its own causal length mask);
     ``k_pool/v_pool (P, ps, Hk, D)`` — the shared page pools;
     ``ptab (B, max_pages) int32`` — logical page ``j`` of sequence ``b``
     lives in pool page ``ptab[b, j]``;
-    ``lens (B,) int32`` — valid KV rows per sequence (the query sits at
-    position ``lens - 1``, so the length mask subsumes causality).
+    ``lens (B,) int32`` — valid KV rows per sequence *including* the
+    block (the last query sits at position ``lens - 1``).
 
     Gathers each sequence's pages into a ``(max_pages*ps)`` logical view
     and runs masked softmax attention — the semantic ground truth the
     Pallas kernel (which never materializes the gather) is tested
     against, and the CPU production path.
     """
-    B, H, D = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]                               # (B, 1, H, D)
+    B, Q, H, D = q.shape
     ps, Hk = k_pool.shape[1], k_pool.shape[2]
     k = k_pool[ptab]                                 # (B, np, ps, Hk, D)
     v = v_pool[ptab]
@@ -138,15 +144,19 @@ def paged_attention_ref(q: Array, k_pool: Array, v_pool: Array,
         k = jnp.repeat(k, H // Hk, axis=1)
         v = jnp.repeat(v, H // Hk, axis=1)
     s = scale if scale is not None else D ** -0.5
-    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+    logits = jnp.einsum("bqhd,bhkd->bhqk", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * s
-    mask = jnp.arange(L)[None, :] < lens[:, None]    # (B, L)
-    logits = jnp.where(mask[:, None, :], logits, -1e30)
+    # per-query valid length: query i may attend rows < lens - (Q-1-i)
+    qlens = lens[:, None] - (Q - 1 - jnp.arange(Q))[None, :]   # (B, Q)
+    mask = jnp.arange(L)[None, None, :] < qlens[:, :, None]    # (B, Q, L)
+    mask = mask[:, None]                                       # (B, 1, Q, L)
+    logits = jnp.where(mask, logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     # fully-masked rows (dead slots, lens == 0): emit zeros, not NaN
-    p = jnp.where(mask[:, None, :], p, 0.0)
-    return jnp.einsum("bhk,bhkd->bhd", p,
-                      v.astype(jnp.float32)).astype(q.dtype)
+    p = jnp.where(mask, p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bqhd", p,
+                     v.astype(jnp.float32)).astype(q.dtype)
+    return out[:, 0] if squeeze else out
 
 
 # ---------------------------------------------------------------------------

@@ -43,6 +43,20 @@ def main() -> int:
     ap.add_argument("--prompt-buckets", type=int, default=0,
                     help="paged only: pad each prompt to a multiple of "
                          "this instead of the uniform --prompt-pad")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: tokens drafted per "
+                         "verify step (0 disables; the decode loop then "
+                         "drafts with --spec-draft params and verifies "
+                         "the whole block in one dense forward)")
+    ap.add_argument("--spec-draft", default="pack",
+                    choices=("pack", "self"),
+                    help="drafter weights: 'pack' = the model packed "
+                         "into its configured sparse formats (the "
+                         "sparse-draft/dense-verify split), 'self' = "
+                         "the verify weights themselves (acceptance "
+                         "~1, measures the amortized dense cost)")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="force speculation off (overrides --spec-k)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -71,13 +85,15 @@ def main() -> int:
             params = restored[0]["params"]
             print(f"restored checkpoint step {restored[1]}")
 
+    spec_k = 0 if args.no_spec else args.spec_k
     scfg = ServeConfig(slots=args.slots, max_len=args.max_len,
                        prompt_pad=args.prompt_pad,
                        max_new_tokens=args.max_new,
                        decode_chunk=args.decode_chunk,
                        temperature=args.temperature, seed=args.seed,
                        page_size=args.page_size, num_pages=args.num_pages,
-                       prompt_buckets=args.prompt_buckets)
+                       prompt_buckets=args.prompt_buckets,
+                       spec_k=spec_k, spec_draft=args.spec_draft)
     server = Server(cfg, mesh, scfg, params)
 
     rng_np = np.random.default_rng(args.seed)
@@ -105,6 +121,14 @@ def main() -> int:
             "pool_pages": scfg.pool_pages,
             "peak_pages": server.stats["peak_pages"],
             "admission_waits": server.stats["admission_waits"],
+        })
+    if scfg.spec:
+        report.update({
+            "spec_k": scfg.spec_k,
+            "spec_draft": scfg.spec_draft,
+            "drafted_tokens": server.stats["drafted"],
+            "accepted_tokens": server.stats["accepted"],
+            "acceptance_rate": round(server.acceptance_rate(), 4),
         })
     print(json.dumps(report))
     return 0

@@ -143,6 +143,84 @@ def decode_step(params: Params, cfg: ModelConfig, token: Array,
     return TR.lm_decode_step(params, cfg, token, cache, pos)
 
 
+def decode_block(params: Params, cfg: ModelConfig, tokens: Array,
+                 cache: Params, pos: Array, collect_states: bool = False
+                 ) -> Tuple[Array, Params, Optional[Params]]:
+    """Multi-token decode-shaped forward — the speculative *verify* step.
+
+    ``tokens (B, T)`` are written at per-slot positions ``pos (B,)``
+    (ragged offsets; causal attention within the block) and scored in ONE
+    batched forward: logits come back for every block position
+    ``(B, T, vocab_padded)`` instead of the last one only.  Works against
+    monolithic and paged caches alike — the attention layer's scatter /
+    mask math already carries ``Lq > 1`` at vector ``cache_pos``.
+
+    Returns ``(logits, new_cache, snapshots)``.  ``snapshots`` is ``None``
+    for the purely positional families (lm, encdec — rollback there is
+    just "don't advance ``cache_pos``"); for the hybrid family with
+    ``collect_states=True`` it holds per-position recurrent-state
+    snapshots (see :func:`recurrent_state` / :func:`select_recurrent`).
+    """
+    f = family(cfg)
+    if f == "encdec":
+        logits, new_cache = ED.encdec_decode_block(params, cfg, tokens,
+                                                   cache, pos)
+        return logits, new_cache, None
+    if f == "hybrid":
+        return HY.hybrid_decode_block(params, cfg, tokens, cache, pos,
+                                      collect=collect_states)
+    logits, new_cache = TR.lm_decode_block(params, cfg, tokens, cache, pos)
+    return logits, new_cache, None
+
+
+# --- recurrent (non-positional) cache state -------------------------------
+#
+# KV caches roll back by position truncation: rows past ``cache_pos`` are
+# dead by masking, so speculative rejection costs nothing.  Recurrent
+# state (the hybrid family's SSM conv/state) is order-dependent — these
+# helpers snapshot it before a drafted block, restore it for the verify
+# forward, and select the per-position snapshot matching the accepted
+# prefix afterwards.
+
+def recurrent_state(cache: Params) -> Optional[Params]:
+    """The order-dependent part of a serving cache (``None`` when the
+    family is purely positional)."""
+    if isinstance(cache, dict) and "ssm" in cache:
+        return cache["ssm"]
+    return None
+
+
+def set_recurrent_state(cache: Params, state: Optional[Params]) -> Params:
+    """Replace the recurrent subtree of ``cache`` with ``state``."""
+    if state is None:
+        return cache
+    return {**cache, "ssm": state}
+
+
+def select_recurrent(snapshots: Params, idx: Array) -> Params:
+    """Pick per-slot snapshots: leaves ``(nl, B, T, ...)`` × ``idx (B,)``
+    → ``(nl, B, ...)`` — the state after block position ``idx[b]``."""
+
+    def pick(leaf):
+        ix = idx.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+        ix = jnp.broadcast_to(ix, leaf.shape[:2] + (1,) + leaf.shape[3:])
+        return jnp.take_along_axis(leaf, ix, axis=2)[:, :, 0]
+
+    return jax.tree.map(pick, snapshots)
+
+
+def where_slot(mask: Array, a: Params, b: Params) -> Params:
+    """Per-slot select between two cache-state trees whose leaves carry
+    the batch on axis 1 (``(nl, B, ...)``): slot ``i`` takes ``a`` where
+    ``mask[i]`` else ``b``."""
+
+    def sel(la, lb):
+        m = mask.reshape((1, -1) + (1,) * (la.ndim - 2))
+        return jnp.where(m, la, lb)
+
+    return jax.tree.map(sel, a, b)
+
+
 def _is_paged(tree: Any) -> bool:
     return isinstance(tree, dict) and "ptab" in tree
 

@@ -269,3 +269,11 @@ def encdec_decode_step(params: Params, cfg: ModelConfig, token: Array,
                        cache: Params, pos: Array) -> Tuple[Array, Params]:
     logits, cache = _dec_cached(params, cfg, token[:, None], cache, pos)
     return logits[:, 0], cache
+
+
+def encdec_decode_block(params: Params, cfg: ModelConfig, tokens: Array,
+                        cache: Params, pos: Array) -> Tuple[Array, Params]:
+    """Multi-token decode-shaped forward (the speculative verify step):
+    ``tokens (B, T)`` against the cached self/cross K/V at per-slot
+    positions ``pos (B,)`` — logits for every block position."""
+    return _dec_cached(params, cfg, tokens, cache, pos)

@@ -129,7 +129,8 @@ def _slice_tree(tree, lo: int, hi: int):
 
 
 def _scan_run(params_run: Params, cfg: ModelConfig, x: Array,
-              cache_run: Optional[Params], remat: bool
+              cache_run: Optional[Params], remat: bool,
+              collect_states: bool = False
               ) -> Tuple[Array, Optional[Params]]:
     """lax.scan over one contiguous run of mamba layers."""
 
@@ -137,7 +138,8 @@ def _scan_run(params_run: Params, cfg: ModelConfig, x: Array,
         p_layer, cache_layer = xs
         h = L.rmsnorm(p_layer["ln"], x, cfg.norm_eps)
         out, new_cache = mamba_block(p_layer, cfg, h, cache=cache_layer,
-                                     sparsity=cfg.mlp_sparsity)
+                                     sparsity=cfg.mlp_sparsity,
+                                     collect_states=collect_states)
         return x + out, new_cache
 
     body_fn = jax.checkpoint(body) if remat else body
@@ -147,11 +149,12 @@ def _scan_run(params_run: Params, cfg: ModelConfig, x: Array,
 def hybrid_apply(params: Params, cfg: ModelConfig, inputs: Array,
                  positions: Optional[Array] = None,
                  cache: Optional[Params] = None,
-                 cache_pos=None, last_only: bool = False
+                 cache_pos=None, last_only: bool = False,
+                 collect_states: bool = False
                  ) -> Tuple[Array, Optional[Params], Array]:
     """Tokens → logits for mamba2/zamba2.  Same contract as ``lm_apply``."""
     x, new_cache = hybrid_hidden(params, cfg, inputs, positions, cache,
-                                 cache_pos)
+                                 cache_pos, collect_states=collect_states)
     if last_only:
         x = x[:, -1:]
     table = params.get("unembed", params["embed"])
@@ -162,8 +165,17 @@ def hybrid_apply(params: Params, cfg: ModelConfig, inputs: Array,
 def hybrid_hidden(params: Params, cfg: ModelConfig, inputs: Array,
                   positions: Optional[Array] = None,
                   cache: Optional[Params] = None,
-                  cache_pos=None) -> Tuple[Array, Optional[Params]]:
-    """The shared trunk: tokens → final (normed) hidden states."""
+                  cache_pos=None,
+                  collect_states: bool = False
+                  ) -> Tuple[Array, Optional[Params]]:
+    """The shared trunk: tokens → final (normed) hidden states.
+
+    ``collect_states=True`` (multi-token verify): every mamba layer also
+    emits per-position recurrent-state snapshots, returned inside
+    ``new_cache["ssm"]`` as ``"conv_seq"`` / ``"ssm_seq"`` leaves (see
+    :func:`repro.models.ssm.mamba_block`); ``hybrid_decode_block`` splits
+    them back out.
+    """
     B, Lq = inputs.shape[:2]
     x = L.embed(params["embed"], inputs, scale=cfg.embed_scale)
     if positions is None:
@@ -206,7 +218,8 @@ def hybrid_hidden(params: Params, cfg: ModelConfig, inputs: Array,
         run_cache = (None if ssm_cache is None
                      else _slice_tree(ssm_cache, lo, hi))
         x, run_new_cache = _scan_run(
-            _slice_tree(params["mamba"], lo, hi), cfg, x, run_cache, remat)
+            _slice_tree(params["mamba"], lo, hi), cfg, x, run_cache, remat,
+            collect_states=collect_states)
         if run_new_cache is not None and ssm_cache is not None:
             new_ssm.append(run_new_cache)
 
@@ -245,3 +258,26 @@ def hybrid_decode_step(params: Params, cfg: ModelConfig, token: Array,
     logits, new_cache, _ = hybrid_apply(
         params, cfg, token[:, None], cache=cache, cache_pos=pos)
     return logits[:, 0], new_cache
+
+
+def hybrid_decode_block(params: Params, cfg: ModelConfig, tokens: Array,
+                        cache: Params, pos: Array, collect: bool = False
+                        ) -> Tuple[Array, Params, Optional[Params]]:
+    """Multi-token decode-shaped forward (the speculative verify step):
+    ``tokens (B, T)`` at per-slot positions ``pos (B,)`` → logits
+    ``(B, T, vocab_padded)`` + updated cache.
+
+    ``collect=True`` additionally returns per-position recurrent-state
+    snapshots ``{"conv": (nl, B, T, K-1, c), "ssm": (nl, B, T, h, p, n)}``
+    — the state *after* each block position — so the caller can roll the
+    recurrence back to any accepted prefix (KV rolls back by position
+    masking; SSM state by snapshot selection)."""
+    logits, new_cache, _ = hybrid_apply(
+        params, cfg, tokens, cache=cache, cache_pos=pos,
+        collect_states=collect)
+    snaps = None
+    if collect and new_cache is not None:
+        ssm = dict(new_cache["ssm"])
+        snaps = {"conv": ssm.pop("conv_seq"), "ssm": ssm.pop("ssm_seq")}
+        new_cache = {**new_cache, "ssm": ssm}
+    return logits, new_cache, snaps

@@ -73,10 +73,18 @@ def _segsum(a: Array) -> Array:
 
 
 def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
-                chunk: int, init_state: Optional[Array] = None
-                ) -> Tuple[Array, Array]:
+                chunk: int, init_state: Optional[Array] = None,
+                return_states: bool = False):
     """SSD scan.  x (b,l,h,p), dt (b,l,h), A (h,), B/C (b,l,h,n) →
-    (y (b,l,h,p), final_state (b,h,p,n))."""
+    (y (b,l,h,p), final_state (b,h,p,n)).
+
+    ``return_states=True`` forces ``chunk=1`` (the inter-chunk recurrence
+    then runs per position) and additionally returns the recurrent state
+    *after every position* as (b, l, h, p, n) — what speculative decoding
+    needs to roll the state back to an arbitrary accepted prefix.
+    """
+    if return_states:
+        chunk = 1
     b, l, h, p = x.shape
     n = B.shape[-1]
     nc = l // chunk
@@ -117,6 +125,11 @@ def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
     y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Cc, states_in, out_decay)
 
     y = (y_diag + y_off).reshape(b, l, h, p)
+    if return_states:
+        # state AFTER position t = state before position t+1; the last
+        # one is the final state (chunk == 1 → one position per chunk)
+        after = jnp.concatenate([states_in[:, 1:], final[:, None]], axis=1)
+        return y, final, after
     return y, final
 
 
@@ -144,10 +157,20 @@ def _pick_chunk(l: int, target: int) -> int:
 
 def mamba_block(params: Params, cfg: ModelConfig, x: Array, *,
                 cache: Optional[Params] = None,
-                sparsity: SparsityConfig = DENSE
+                sparsity: SparsityConfig = DENSE,
+                collect_states: bool = False
                 ) -> Tuple[Array, Optional[Params]]:
     """One Mamba-2 mixer.  ``cache`` (decode): {"conv": (b,K-1,c),
-    "ssm": (b,h,p,n)} → returns updated cache; None → chunked scan."""
+    "ssm": (b,h,p,n)} → returns updated cache; None → chunked scan.
+
+    ``collect_states=True`` (multi-token verify path, needs ``cache`` and
+    ``l > 1``): the returned cache additionally carries per-position
+    snapshots — ``"conv_seq"`` (b, l, K-1, c) and ``"ssm_seq"``
+    (b, l, h, p, n), the recurrent state *after* each of the l positions —
+    so a speculative-decode caller can truncate the recurrence to any
+    accepted prefix (KV caches roll back by masking; recurrent state
+    rolls back by selecting the snapshot).
+    """
     b, l, d = x.shape
     di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
     P = cfg.ssm_head_dim
@@ -158,8 +181,13 @@ def mamba_block(params: Params, cfg: ModelConfig, x: Array, *,
                          + params["dt_bias"][None, None, :])   # (b, l, H)
 
     conv_state = cache["conv"] if cache is not None else None
+    xBC_raw = xBC                       # pre-conv inputs (conv-state domain)
     xBC, new_conv = _causal_conv(xBC, params["conv_w"], params["conv_b"],
                                  conv_state)
+    if conv_state is not None:
+        # keep the cache's dtype: the serving decode loop carries the
+        # cache through a lax.scan, whose carry type must be stable
+        new_conv = new_conv.astype(conv_state.dtype)
     xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
     xs, B, C = jnp.split(xBC, [di, di + G * N], axis=-1)
     xs = xs.reshape(b, l, H, P)
@@ -174,10 +202,27 @@ def mamba_block(params: Params, cfg: ModelConfig, x: Array, *,
         new_cache = None
     elif l > 1:
         # prefill with cache: chunked scan seeded from the cached state
-        y, final = ssd_chunked(xs, dt, A, B, C,
-                               _pick_chunk(l, cfg.ssm_chunk),
-                               init_state=cache["ssm"].astype(jnp.float32))
-        new_cache = {"conv": new_conv, "ssm": final}
+        if collect_states:
+            y, final, ssm_seq = ssd_chunked(
+                xs, dt, A, B, C, 1,
+                init_state=cache["ssm"].astype(jnp.float32),
+                return_states=True)
+            # conv state after position t = the last K-1 pre-conv inputs
+            # of the prefix ending at t: sliding windows over the padded
+            # input buffer (this branch requires a cache, so conv_state
+            # is always set)
+            Kc = params["conv_w"].shape[0]
+            xp = jnp.concatenate(
+                [conv_state.astype(xBC_raw.dtype), xBC_raw], 1)
+            win = (jnp.arange(l)[:, None] + 1 + jnp.arange(Kc - 1)[None, :])
+            conv_seq = xp[:, win].astype(new_conv.dtype)  # (b, l, K-1, c)
+            new_cache = {"conv": new_conv, "ssm": final,
+                         "conv_seq": conv_seq, "ssm_seq": ssm_seq}
+        else:
+            y, final = ssd_chunked(
+                xs, dt, A, B, C, _pick_chunk(l, cfg.ssm_chunk),
+                init_state=cache["ssm"].astype(jnp.float32))
+            new_cache = {"conv": new_conv, "ssm": final}
     else:
         # O(1) recurrent update (l == 1)
         s = cache["ssm"].astype(jnp.float32)                   # (b, h, p, n)

@@ -317,3 +317,14 @@ def lm_decode_step(params: Params, cfg: ModelConfig, token: Array,
     logits, new_cache, _ = lm_apply(params, cfg, token[:, None],
                                     cache=cache, cache_pos=pos)
     return logits[:, 0], new_cache
+
+
+def lm_decode_block(params: Params, cfg: ModelConfig, tokens: Array,
+                    cache: Params, pos: Array) -> Tuple[Array, Params]:
+    """Multi-token decode-shaped forward (the speculative verify step):
+    ``tokens (B, T)`` written at per-slot positions ``pos (B,)``, causal
+    within the block — one batched forward instead of T decode steps.
+    Returns logits for every block position ``(B, T, vocab_padded)``."""
+    logits, new_cache, _ = lm_apply(params, cfg, tokens,
+                                    cache=cache, cache_pos=pos)
+    return logits, new_cache

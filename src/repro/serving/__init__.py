@@ -1,5 +1,5 @@
 from repro.serving.engine import (  # noqa: F401
     Request, ServeConfig, Server, build_decode_loop, build_decode_step,
     build_paged_decode_loop, build_paged_prefill_slot_step,
-    build_prefill_slot_step, build_prefill_step, init_decode_state,
-    sample_token)
+    build_prefill_slot_step, build_prefill_step, build_spec_decode_loop,
+    init_decode_state, sample_token, sample_token_folded)

@@ -43,7 +43,32 @@ attention view narrowed to the live slots' page bucket.  All of it is
 host arithmetic over already-fetched state: the sync contract above is
 unchanged under paging.
 
+Speculative decoding (``ServeConfig.spec_k > 0``): the decode loop is
+replaced by :func:`build_spec_decode_loop` — each scan step *drafts*
+``spec_k`` tokens per slot with the (typically sparse-packed) draft
+params at the slot's own positions, then runs ONE batched verify forward
+over the ``(slots, spec_k+1)`` block with the dense params
+(``models.decode_block``), accepts the matched prefix (greedy) or the
+residual-sampled prefix (temperature > 0), and commits only accepted
+tokens.  Rollback is per-slot ``cache_pos`` truncation — rejected rows
+are dead by masking (O(1); under paging the over-written pool rows sit
+in pages the slot already owns, and pages allocated ahead of the commit
+point are returned to the pool at the chunk boundary).  Draft and verify
+share ONE KV cache: the verify block re-writes the drafted rows with
+dense-model K/V, so the committed cache is always verify-model state;
+the hybrid family's recurrent SSM state (which masking cannot roll back)
+is snapshotted per block position and truncated to the accepted prefix
+(``models.select_recurrent``).  Greedy speculative output is therefore
+bit-identical to the non-speculative loop *regardless of the draft* —
+the draft only moves the acceptance rate, i.e. the tok/s.  One host
+sync per chunk still holds: a chunk now carries up to
+``decode_chunk * (spec_k + 1)`` tokens plus the drafted/accepted
+counters in the same fetch.
+
 Sampling: greedy or temperature; fully deterministic given the seed.
+The speculative path derives every draw via ``jax.random.fold_in`` keyed
+on (chunk, step, slot, draft position), so the number of tokens a slot
+accepts can never shift another slot's — or another position's — stream.
 """
 
 from __future__ import annotations
@@ -87,10 +112,31 @@ class ServeConfig:
     #                                 this (≤ prompt_pad) instead of the
     #                                 uniform prompt_pad — short prompts
     #                                 then occupy only their own pages
+    # --- speculative decoding (spec_k > 0 switches the decode loop) ---
+    spec_k: int = 0                 # tokens drafted per verify; 0 → off
+    spec_draft: str = "self"        # draft params when none are passed:
+    #                                 "self" → the verify params (greedy
+    #                                 acceptance ≈ 1; the amortization
+    #                                 baseline), "pack" → the verify
+    #                                 params packed into the model
+    #                                 config's sparse formats (the
+    #                                 sparse-draft/dense-verify split)
 
     @property
     def paged(self) -> bool:
         return self.page_size > 0
+
+    @property
+    def spec(self) -> bool:
+        return self.spec_k > 0
+
+    @property
+    def chunk_tokens(self) -> int:
+        """Upper bound on tokens a slot can emit per decode chunk — the
+        host-block height.  ``decode_chunk`` counts *scan steps*: plain
+        decode emits one token per step, speculation up to ``spec_k + 1``
+        (the carry token plus the accepted drafts)."""
+        return self.decode_chunk * (self.spec_k + 1)
 
     @property
     def max_pages(self) -> int:
@@ -136,6 +182,37 @@ def sample_token(logits: Array, key: Array, temperature: float) -> Array:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.random.categorical(
         key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def _slot_keys(key: Array, n: int) -> Array:
+    """(n,) independent keys via per-slot ``fold_in``."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+
+
+def sample_token_folded(logits: Array, key: Array,
+                        temperature: float) -> Array:
+    """(B, V) → (B,) with a per-slot ``fold_in`` key discipline.
+
+    The speculative path samples at many (step, slot, draft-position)
+    sites whose *consumption* depends on data (how many drafts a slot
+    accepts).  A split-per-call stream would let one slot's acceptance
+    shift every later draw; folding the key per slot (callers fold per
+    step and draft position first) pins each draw to its coordinates, so
+    the same seed yields the same tokens with and without speculation at
+    temperature 0 — and a reproducible stream at temperature > 0.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    keys = _slot_keys(key, logits.shape[0])
+    return jax.vmap(
+        lambda k, l: jax.random.categorical(k, l / temperature)
+    )(keys, logits).astype(jnp.int32)
+
+
+def _slot_uniform(key: Array, n: int) -> Array:
+    """(n,) uniforms, one per slot, via the same fold discipline."""
+    keys = _slot_keys(key, n)
+    return jax.vmap(lambda k: jax.random.uniform(k))(keys)
 
 
 def _device_fetch(tree: Any) -> Any:
@@ -282,7 +359,8 @@ def build_prefill_wave_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
 
 def _fresh_stats() -> Dict[str, Any]:
     return {"chunk_s": [], "chunk_tokens": [], "prefills": 0,
-            "peak_pages": 0, "admission_waits": 0}
+            "peak_pages": 0, "admission_waits": 0,
+            "drafted": 0, "accepted": 0}
 
 
 def init_decode_state(slots: int) -> Dict[str, Array]:
@@ -460,6 +538,200 @@ def build_paged_decode_loop(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
         donate_argnums=(1, 2))
 
 
+def build_spec_decode_loop(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                           abstract_params: Any, abstract_draft: Any,
+                           abstract_cache: Any, paged: bool = False,
+                           view_pages: Optional[int] = None) -> Callable:
+    """(params, draft_params, cache, state, key[, ptab])
+    → (cache, state, tokens, emitted, drafted, accepted).
+
+    The speculative twin of :func:`build_decode_loop` /
+    :func:`build_paged_decode_loop`: each of the ``decode_chunk`` scan
+    steps
+
+      1. emits the carry token (sampled by the previous step / prefill),
+      2. *drafts* ``spec_k`` tokens per slot with ``draft_params`` — an
+         inner scan of single-token decode steps at the slot's own
+         positions, exactly the sparse decode geometry (``M = slots``),
+      3. runs ONE batched verify forward over the ``(slots, spec_k+1)``
+         block with the dense ``params`` (``models.decode_block``,
+         ``M = slots*(spec_k+1)``), which also re-writes the block's KV
+         rows with verify-model values,
+      4. accepts per slot the longest draft prefix the verify agrees
+         with (greedy: token match; temperature: residual rejection
+         sampling) and commits it — ``cache_pos`` advances by the
+         emitted count, rejected rows are dead by masking, and the
+         hybrid family's recurrent state is truncated to the accepted
+         prefix via the per-position snapshots.
+
+    The host block is ``(decode_chunk * (spec_k+1), slots)`` — still one
+    device→host transfer per chunk, now also carrying the drafted /
+    accepted totals for the acceptance-rate stats.  A slot freezes when
+    fewer than ``spec_k + 1`` cache rows remain (the block write must
+    stay in bounds), so full parity with the plain loop needs
+    ``max_len ≥ prompt_rows + max_new + spec_k``.
+    """
+    pspecs = SH.param_specs(abstract_params, cfg, mesh)
+    dspecs = SH.param_specs(abstract_draft, cfg, mesh)
+    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
+    V = cfg.vocab_size
+    K = scfg.spec_k
+    T = scfg.temperature
+
+    def spec_step(params, dparams, cache, st, skey):
+        """One draft+verify+commit step; ``cache`` is the (possibly
+        view-narrowed) cache the models run against."""
+        tok, pos = st["tok"], st["pos"]
+        done, left = st["done"], st["left"]
+        # emit the carry token (same contract as the plain loop), but
+        # freeze while the whole drafted block still fits below max_len
+        emit0 = (~done) & (left > 0)
+        left = left - emit0
+        done = done | (emit0 & ((tok == scfg.eos_token) | (left == 0)
+                                | (pos + 1 + K >= scfg.max_len)))
+        alive = ~done
+
+        rec0 = MZ.recurrent_state(cache)
+
+        def draft_body(c, i):
+            dcache, dtok = c
+            lg, dcache = MZ.decode_step(dparams, cfg, dtok, dcache, pos + i)
+            lg = lg[:, :V]
+            nxt = sample_token_folded(lg, jax.random.fold_in(skey, i), T)
+            return (dcache, nxt), (nxt, lg)
+
+        (dcache, _), (drafts, dlogits) = jax.lax.scan(
+            draft_body, (cache, tok), jnp.arange(K))
+        # drafts (K, B): d_1..d_K; dlogits (K, B, V): the dists they came
+        # from.  The draft advanced any recurrent state — restore it, the
+        # verify block consumes d_0..d_K itself (KV rows are re-written
+        # by the verify's own scatter, so they need no restore).
+        dcache = MZ.set_recurrent_state(dcache, rec0)
+        block = jnp.concatenate([tok[None], drafts], 0).T    # (B, K+1)
+        vlg, cache, snaps = MZ.decode_block(
+            params, cfg, block, dcache, pos,
+            collect_states=rec0 is not None)
+        vlg = vlg[:, :, :V]
+        dT = drafts.T                                        # (B, K)
+
+        if T <= 0.0:
+            # greedy: accept drafts while they equal the verify argmax;
+            # the first mismatch position supplies the correction token,
+            # full acceptance supplies the bonus token — either way the
+            # carry is g[j]
+            g = jnp.argmax(vlg, axis=-1).astype(jnp.int32)   # (B, K+1)
+            acc = jnp.cumprod((dT == g[:, :K]).astype(jnp.int32), axis=1)
+            j = acc.sum(axis=1)                              # (B,)
+            carry_tok = jnp.take_along_axis(g, j[:, None], 1)[:, 0]
+        else:
+            # residual (rejection) sampling — the lossless acceptance
+            # rule: accept d_i with prob min(1, p_verify/p_draft); on
+            # the first rejection resample from max(p_v - p_d, 0); on
+            # full acceptance the residual degenerates to p_verify at
+            # the bonus position.
+            pv = jax.nn.softmax(vlg / T, axis=-1)            # (B, K+1, V)
+            pd = jax.nn.softmax(dlogits / T, axis=-1)        # (K, B, V)
+            pd = pd.transpose(1, 0, 2)                       # (B, K, V)
+            pv_t = jnp.take_along_axis(pv[:, :K], dT[..., None],
+                                       axis=-1)[..., 0]      # (B, K)
+            pd_t = jnp.take_along_axis(pd, dT[..., None],
+                                       axis=-1)[..., 0]
+            u = jnp.stack([
+                _slot_uniform(jax.random.fold_in(skey, K + 1 + i),
+                              dT.shape[0]) for i in range(K)], axis=1)
+            accept = u * pd_t <= pv_t                        # (B, K)
+            acc = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+            j = acc.sum(axis=1)
+            pv_j = jnp.take_along_axis(
+                pv, j[:, None, None], axis=1)[:, 0]          # (B, V)
+            pd_pad = jnp.concatenate(
+                [pd, jnp.zeros_like(pd[:, :1])], axis=1)     # (B, K+1, V)
+            pd_j = jnp.take_along_axis(
+                pd_pad, j[:, None, None], axis=1)[:, 0]
+            res = jnp.maximum(pv_j - pd_j, 0.0)
+            res_sum = res.sum(-1, keepdims=True)
+            res = jnp.where(res_sum > 0, res / res_sum, pv_j)
+            res_logits = jnp.where(res > 0, jnp.log(res), -1e30)
+            carry_tok = sample_token_folded(
+                res_logits, jax.random.fold_in(skey, 2 * K + 2), 1.0)
+
+        # commit-and-emit the accepted drafts: budget and EOS can cut
+        # the accepted prefix short exactly like the plain loop would
+        accb = acc.astype(bool)
+        eos_hit = accb & (dT == scfg.eos_token)
+        eos_before = (jnp.cumsum(eos_hit.astype(jnp.int32), axis=1)
+                      - eos_hit.astype(jnp.int32)) > 0
+        in_budget = jnp.arange(K)[None, :] < left[:, None]
+        emit_d = alive[:, None] & accb & in_budget & ~eos_before
+        n_emit = emit_d.sum(axis=1).astype(left.dtype)
+        left = left - n_emit
+        done = done | (alive & ((emit_d & eos_hit).any(axis=1)
+                                | (left == 0)))
+        pos = jnp.where(alive, pos + 1 + n_emit, pos)
+        tok = jnp.where(~done, carry_tok, tok)
+
+        if snaps is not None:
+            # recurrent state can't roll back by masking: truncate it to
+            # the accepted prefix (state after d_0..d_{n_emit}); frozen
+            # slots keep their pre-block state
+            sel = MZ.select_recurrent(snaps, n_emit.astype(jnp.int32))
+            cache = MZ.set_recurrent_state(
+                cache, MZ.where_slot(alive, sel, rec0))
+
+        st = {"tok": tok, "pos": pos, "done": done, "left": left}
+        # column 0 is the carry token (block[:, 0]), columns 1..K the
+        # drafted candidates — the emit mask says which ones landed
+        step_tokens = jnp.concatenate([block[:, :1], dT], axis=1)
+        step_emits = jnp.concatenate([emit0[:, None], emit_d], axis=1)
+        drafted = jnp.where(alive, K, 0).sum()
+        accepted = jnp.where(alive, j, 0).sum()
+        return cache, st, step_tokens, step_emits, drafted, accepted
+
+    def scan_chunk(params, dparams, cache, state, key):
+        def body(carry, step):
+            cache, st, key = carry
+            skey = jax.random.fold_in(key, step)
+            if paged:
+                vcache = MZ.page_view(cache, view_pages)
+                vcache, st, toks, emits, dr, ac = spec_step(
+                    params, dparams, vcache, st, skey)
+                cache = MZ.unpage_view(vcache, cache)
+            else:
+                cache, st, toks, emits, dr, ac = spec_step(
+                    params, dparams, cache, st, skey)
+            return (cache, st, key), (toks, emits, dr, ac)
+
+        (cache, state, _), (toks, emits, dr, ac) = jax.lax.scan(
+            body, (cache, state, key), jnp.arange(scfg.decode_chunk))
+        # (steps, B, K+1) → time-major (steps*(K+1), B): the same block
+        # layout the plain loop hands the host, just taller
+        tokens = toks.transpose(0, 2, 1).reshape(-1, toks.shape[1])
+        emitted = emits.transpose(0, 2, 1).reshape(-1, emits.shape[1])
+        return cache, state, tokens, emitted, dr.sum(), ac.sum()
+
+    sspecs = _state_shardings(mesh)
+    if paged:
+        def loop(params, dparams, cache, state, key, ptab):
+            cache = MZ.set_page_table(cache, ptab)
+            return scan_chunk(params, dparams, cache, state, key)
+
+        return jax.jit(
+            loop,
+            in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, dspecs),
+                          SH.named(mesh, cspecs), sspecs, None, None),
+            out_shardings=(SH.named(mesh, cspecs), sspecs, None, None,
+                           None, None),
+            donate_argnums=(2, 3))
+
+    return jax.jit(
+        scan_chunk,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, dspecs),
+                      SH.named(mesh, cspecs), sspecs, None),
+        out_shardings=(SH.named(mesh, cspecs), sspecs, None, None,
+                       None, None),
+        donate_argnums=(2, 3))
+
+
 # ---------------------------------------------------------------------------
 # Scheduler
 # ---------------------------------------------------------------------------
@@ -479,7 +751,7 @@ class Server:
     """
 
     def __init__(self, cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
-                 params: Any):
+                 params: Any, draft_params: Any = None):
         self.cfg, self.mesh, self.scfg = cfg, mesh, scfg
         self.params = params
         self.queue: List[Request] = []
@@ -488,6 +760,24 @@ class Server:
         self._key = jax.random.key(scfg.seed)
         self.sync_count = 0
         self.stats: Dict[str, Any] = _fresh_stats()
+
+        if scfg.spec:
+            if scfg.prompt_pad + scfg.spec_k + 1 > scfg.max_len:
+                raise ValueError(
+                    f"spec_k={scfg.spec_k} needs max_len ≥ prompt_pad + "
+                    f"spec_k + 1 (= {scfg.prompt_pad + scfg.spec_k + 1}) "
+                    "so the first drafted block fits the cache")
+            if draft_params is None:
+                if scfg.spec_draft == "pack":
+                    from repro.core.sparse_linear import make_draft_params
+                    draft_params = make_draft_params(params, cfg)
+                elif scfg.spec_draft == "self":
+                    draft_params = params
+                else:
+                    raise ValueError(
+                        f"unknown spec_draft {scfg.spec_draft!r} "
+                        "(expected 'self' or 'pack')")
+        self.draft_params = draft_params
 
         abstract_params = jax.eval_shape(lambda: params)
         # kernel/mode/blocks resolved per packed weight at each phase's
@@ -501,6 +791,22 @@ class Server:
             + dispatch.plan_params(params, M=scfg.prompt_pad))
         self.decode_plan = dispatch.plan_params(params, M=scfg.slots)
         self.dispatch_plan = self.prefill_plan          # back-compat alias
+        # speculative phases get their own geometry rows: the draft
+        # re-plans the (usually sparse-packed) draft weights at the
+        # decode geometry, the verify plans the dense weights at
+        # M = slots*(spec_k+1) — its own autotune keys (entries carry M)
+        self.draft_plan: List[dict] = []
+        self.verify_plan: List[dict] = []
+        if scfg.spec:
+            self.draft_plan = dispatch.plan_params(self.draft_params,
+                                                   M=scfg.slots)
+            self.verify_plan = dispatch.plan_params(
+                params, M=scfg.slots * (scfg.spec_k + 1))
+            # a speculative decode chunk runs both phases — its plan
+            # carries the draft rows (the sparse kernels doing the
+            # per-token work) and the verify-shaped rows
+            self.decode_plan = (self.decode_plan + self.draft_plan
+                                + self.verify_plan)
         self._abstract_cache = jax.eval_shape(
             lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len,
                                   page_size=scfg.page_size,
@@ -514,6 +820,8 @@ class Server:
                                   num_pages=scfg.pool_pages),
             out_shardings=SH.named(mesh, cspecs))
         self._abstract_params = abstract_params
+        self._abstract_draft = (jax.eval_shape(lambda: self.draft_params)
+                                if scfg.spec else None)
         if scfg.paged:
             # both plans additionally carry the paged-attention decision
             # (its own page-shaped dispatch/autotune key)
@@ -522,6 +830,14 @@ class Server:
                 max_pages=scfg.max_pages)
             self.prefill_plan = self.prefill_plan + [pa]
             self.decode_plan = self.decode_plan + [pa]
+            if scfg.spec:
+                # the verify scores spec_k+1 queries per slot — its
+                # paged-attention row is keyed at the block geometry
+                pav = dispatch.plan_paged_attention(
+                    cfg, batch=scfg.slots * (scfg.spec_k + 1),
+                    page_size=scfg.page_size, max_pages=scfg.max_pages)
+                self.verify_plan = self.verify_plan + [pav]
+                self.decode_plan = self.decode_plan + [pav]
             # compiled paged steps are keyed by static geometry: prefill
             # by prompt_rows bucket, decode by view-pages bucket
             self._paged_prefill_steps: Dict[int, Callable] = {}
@@ -538,14 +854,26 @@ class Server:
                 cfg, mesh, scfg, abstract_params, self._abstract_cache)
             self._prefill_wave = build_prefill_wave_step(
                 cfg, mesh, scfg, abstract_params, self._abstract_cache)
-            self._decode_loop = build_decode_loop(
-                cfg, mesh, scfg, abstract_params, self._abstract_cache)
+            if scfg.spec:
+                self._decode_loop = build_spec_decode_loop(
+                    cfg, mesh, scfg, abstract_params, self._abstract_draft,
+                    self._abstract_cache)
+            else:
+                self._decode_loop = build_decode_loop(
+                    cfg, mesh, scfg, abstract_params, self._abstract_cache)
 
     def reset_stats(self) -> None:
-        """Zero the serving counters (benchmarks call this after their
-        compile warm-up pass)."""
+        """Zero the serving counters — including the speculative
+        drafted/accepted tallies behind :meth:`acceptance_rate` —
+        (benchmarks call this after their compile warm-up pass)."""
         self.sync_count = 0
         self.stats = _fresh_stats()
+
+    def acceptance_rate(self) -> float:
+        """Accepted / drafted tokens since the last ``reset_stats`` (1.0
+        for a draft the verifier never corrects; 0.0 with speculation
+        off or before any chunk ran)."""
+        return self.stats["accepted"] / max(self.stats["drafted"], 1)
 
     def cache_bytes(self) -> int:
         """Allocated KV/state cache footprint in bytes (the buffers
@@ -592,12 +920,28 @@ class Server:
 
     def _ensure_pages(self, i: int) -> None:
         """Cover the next decode chunk (allocation happens at chunk
-        boundaries, never mid-scan), capped at the slot's reservation."""
+        boundaries, never mid-scan), capped at the slot's reservation.
+        ``chunk_tokens`` is the chunk's commit upper bound — under
+        speculation the drafted/verify rows *beyond* any commit need no
+        real page (their writes land in the null page and their reads
+        only cost acceptance, never correctness)."""
         scfg = self.scfg
         self._alloc_pages(i, min(
-            -(-min(self._slot_rows[i] + scfg.decode_chunk,
+            -(-min(self._slot_rows[i] + scfg.chunk_tokens,
                    scfg.max_len) // scfg.page_size),
             self._slot_need[i]))
+
+    def _trim_pages(self, i: int) -> None:
+        """Return pages allocated past slot ``i``'s committed rows (the
+        speculative chunk boundary: low acceptance leaves the lazy
+        chunk-cover allocation ahead of the commit point — hand those
+        pages back so waiting requests can admit; the next chunk's
+        ``_ensure_pages`` re-covers)."""
+        target = max(-(-self._slot_rows[i] // self.scfg.page_size), 1)
+        while len(self._slot_pages[i]) > target:
+            page = self._slot_pages[i].pop()
+            self._ptab[i, len(self._slot_pages[i])] = 0
+            self._free_pages.append(page)
 
     def _retire_slot(self, i: int) -> None:
         """Return slot ``i``'s pages to the pool and null its table row —
@@ -623,9 +967,15 @@ class Server:
     def _paged_decode_loop(self, view: Optional[int]) -> Callable:
         fn = self._paged_decode_loops.get(view)
         if fn is None:
-            fn = build_paged_decode_loop(
-                self.cfg, self.mesh, self.scfg, self._abstract_params,
-                self._abstract_cache, view_pages=view)
+            if self.scfg.spec:
+                fn = build_spec_decode_loop(
+                    self.cfg, self.mesh, self.scfg, self._abstract_params,
+                    self._abstract_draft, self._abstract_cache,
+                    paged=True, view_pages=view)
+            else:
+                fn = build_paged_decode_loop(
+                    self.cfg, self.mesh, self.scfg, self._abstract_params,
+                    self._abstract_cache, view_pages=view)
             self._paged_decode_loops[view] = fn
         return fn
 
@@ -647,7 +997,7 @@ class Server:
         returns the slot's pages."""
         scfg = self.scfg
         n_emitted = 0
-        for t in range(scfg.decode_chunk):
+        for t in range(blk.shape[0]):       # chunk_tokens rows under spec
             for i in range(scfg.slots):
                 if emit[t, i] and slot_req[i] is not None:
                     slot_req[i].out.append(int(blk[t, i]))
@@ -664,6 +1014,25 @@ class Server:
                 slot_req[i] = None
                 if scfg.paged:
                     self._retire_slot(i)
+
+    def _run_chunk(self, loop: Callable, cache, state, key, *extra):
+        """Invoke one decode chunk and make the single device→host fetch
+        — shared by the plain and speculative paths (the speculative
+        loop's drafted/accepted counters ride in the same transfer)."""
+        if self.scfg.spec:
+            cache, state, tokens, emitted, dr, ac = loop(
+                self.params, self.draft_params, cache, state, key, *extra)
+            blk, emit, done, dr, ac = _device_fetch(
+                (tokens, emitted, state["done"], dr, ac))
+            self.stats["drafted"] += int(dr)
+            self.stats["accepted"] += int(ac)
+        else:
+            cache, state, tokens, emitted = loop(
+                self.params, cache, state, key, *extra)
+            blk, emit, done = _device_fetch(
+                (tokens, emitted, state["done"]))
+        self.sync_count += 1
+        return cache, state, blk, emit, done
 
     def run(self) -> List[Request]:
         """Serve until the queue drains; returns finished requests."""
@@ -714,12 +1083,9 @@ class Server:
                 # one chunk: decode_chunk steps on-device, one sync back
                 self._key, sk = jax.random.split(self._key)
                 t0 = time.perf_counter()
-                cache, state, tokens, emitted = self._decode_loop(
-                    self.params, cache, state, sk)
-                blk, emit, done = _device_fetch(
-                    (tokens, emitted, state["done"]))
+                cache, state, blk, emit, done = self._run_chunk(
+                    self._decode_loop, cache, state, sk)
                 dt = time.perf_counter() - t0
-                self.sync_count += 1
                 self._collect_chunk(blk, emit, done, slot_req, dt)
         return self.finished
 
@@ -772,22 +1138,30 @@ class Server:
                     self.stats["prefills"] += 1
                 if not any(slot_req):
                     break
+                # the attention view must cover every row the chunk can
+                # WRITE: commits (chunk_tokens) plus, under speculation,
+                # the verify block's uncommitted tail (spec_k rows) —
+                # otherwise a live slot's block write would clip into
+                # view-interior pages it still attends to
+                span = scfg.chunk_tokens + scfg.spec_k
                 live_rows = 0
                 for i in range(scfg.slots):
                     if slot_req[i] is not None:
                         self._ensure_pages(i)
                         live_rows = max(live_rows,
-                                        min(self._slot_rows[i]
-                                            + scfg.decode_chunk,
+                                        min(self._slot_rows[i] + span,
                                             scfg.max_len))
                 loop = self._paged_decode_loop(self._view_pages(live_rows))
                 self._key, sk = jax.random.split(self._key)
                 t0 = time.perf_counter()
-                cache, state, tokens, emitted = loop(
-                    self.params, cache, state, sk, jnp.asarray(self._ptab))
-                blk, emit, done = _device_fetch(
-                    (tokens, emitted, state["done"]))
+                cache, state, blk, emit, done = self._run_chunk(
+                    loop, cache, state, sk, jnp.asarray(self._ptab))
                 dt = time.perf_counter() - t0
-                self.sync_count += 1
                 self._collect_chunk(blk, emit, done, slot_req, dt)
+                if scfg.spec:
+                    # chunk boundary: pages the chunk covered but the
+                    # commits never reached go back to the pool
+                    for i in range(scfg.slots):
+                        if slot_req[i] is not None:
+                            self._trim_pages(i)
         return self.finished
