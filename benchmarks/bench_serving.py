@@ -11,6 +11,9 @@ path the models use — nothing hand-wired).  For every cell we report:
     ``decode_chunk`` steps, per-slot continuous refill);
   * ``p50_ms`` / ``p95_ms`` — per-token latency percentiles derived from
     the engine's per-chunk wall times;
+  * ``ttft_p50_ms`` / ``ttft_p95_ms`` — time-to-first-token percentiles
+    over the scenario's requests (queue wait + prefill + first chunk,
+    stamped per request by the engine);
   * ``ref_tok_per_s``    — the seed reference: whole-wave prefill + one
     jitted decode step and one host sync **per token**;
   * ``speedup``          — chunked / reference throughput (the number
@@ -59,7 +62,7 @@ import numpy as np
 from repro import models as MZ
 from repro.core.sparse_linear import SparsityConfig, pack_params
 from repro.models.config import ModelConfig
-from repro.serving import (ServeConfig, Server, build_decode_step,
+from repro.serving import (Engine, ServeConfig, build_decode_step,
                            build_prefill_step, sample_token)
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
@@ -140,7 +143,7 @@ def _serve_chunked(cfg, mesh, params, slots, requests, scfg=None,
         slots=slots, max_len=MAX_LEN, prompt_pad=PROMPT_PAD,
         max_new_tokens=MAX_NEW, decode_chunk=DECODE_CHUNK,
         temperature=0.0, eos_token=-1)
-    server = Server(cfg, mesh, scfg, params)
+    server = Engine(cfg, mesh, scfg, params)
     if warm_all:
         # heterogeneous mix: visit every prompt bucket / view bucket so
         # the timed run pays zero compiles
@@ -169,9 +172,15 @@ def _serve_chunked(cfg, mesh, params, slots, requests, scfg=None,
         # per-page bytes across layers ≈ pool bytes / (pool+null pages)
         page_bytes_used = int(
             leaf_bytes * server.stats["peak_pages"] / (scfg.pool_pages + 1))
+    ttft_ms = np.asarray([r.ttft_s for r in done
+                          if r.ttft_s is not None]) * 1e3
+    if ttft_ms.size == 0:
+        ttft_ms = np.zeros(1)
     return {"tokens": toks, "tok_per_s": toks / wall,
             "p50_ms": float(np.percentile(per_tok_ms, 50)),
             "p95_ms": float(np.percentile(per_tok_ms, 95)),
+            "ttft_p50_ms": float(np.percentile(ttft_ms, 50)),
+            "ttft_p95_ms": float(np.percentile(ttft_ms, 95)),
             "syncs": server.sync_count, "wall_s": wall,
             "kv_bytes": server.cache_bytes(),
             "peak_used_bytes": page_bytes_used,
@@ -250,6 +259,8 @@ def _het_scenario(mesh) -> list:
          "tok_per_s": round(mono["tok_per_s"], 1),
          "p50_ms": round(mono["p50_ms"], 3),
          "p95_ms": round(mono["p95_ms"], 3),
+         "ttft_p50_ms": round(mono["ttft_p50_ms"], 3),
+         "ttft_p95_ms": round(mono["ttft_p95_ms"], 3),
          "syncs": mono["syncs"],
          "kv_mb": round(mono["kv_bytes"] * mb, 3)},
         {"config": "het-paged", "slots": HET_SLOTS,
@@ -257,6 +268,8 @@ def _het_scenario(mesh) -> list:
          "tok_per_s": round(paged["tok_per_s"], 1),
          "p50_ms": round(paged["p50_ms"], 3),
          "p95_ms": round(paged["p95_ms"], 3),
+         "ttft_p50_ms": round(paged["ttft_p50_ms"], 3),
+         "ttft_p95_ms": round(paged["ttft_p95_ms"], 3),
          "syncs": paged["syncs"],
          "kv_mb": round(paged["kv_bytes"] * mb, 3),
          "peak_used_mb": round(paged["peak_used_bytes"] * mb, 3),
@@ -293,6 +306,8 @@ def _spec_scenario(mesh, paged_tok_per_s: float) -> list:
                 "acceptance_rate": round(out["acceptance_rate"], 3),
                 "p50_ms": round(out["p50_ms"], 3),
                 "p95_ms": round(out["p95_ms"], 3),
+                "ttft_p50_ms": round(out["ttft_p50_ms"], 3),
+                "ttft_p95_ms": round(out["ttft_p95_ms"], 3),
                 "syncs": out["syncs"],
                 "speedup_vs_paged": round(
                     out["tok_per_s"] / max(paged_tok_per_s, 1e-9), 2)}
@@ -328,6 +343,8 @@ def run() -> dict:
                 "tok_per_s": round(chunked["tok_per_s"], 1),
                 "p50_ms": round(chunked["p50_ms"], 3),
                 "p95_ms": round(chunked["p95_ms"], 3),
+                "ttft_p50_ms": round(chunked["ttft_p50_ms"], 3),
+                "ttft_p95_ms": round(chunked["ttft_p95_ms"], 3),
                 "syncs": chunked["syncs"],
                 "ref_tok_per_s": round(ref["tok_per_s"], 1),
                 "speedup": round(chunked["tok_per_s"]
@@ -352,13 +369,14 @@ def main(out=None) -> None:
     print(f"# serving bench — chunked loop (decode_chunk="
           f"{out['decode_chunk']}) vs per-token loop, "
           f"{out['backend']} backend")
-    print("config,slots,tokens,tok_per_s,p50_ms,p95_ms,syncs,"
-          "ref_tok_per_s,speedup")
+    print("config,slots,tokens,tok_per_s,p50_ms,p95_ms,ttft_p50_ms,"
+          "ttft_p95_ms,syncs,ref_tok_per_s,speedup")
     for r in out["rows"]:
         if r["config"].startswith(("het-", "spec-")):
             continue
         print(f"{r['config']},{r['slots']},{r['tokens']},"
-              f"{r['tok_per_s']},{r['p50_ms']},{r['p95_ms']},{r['syncs']},"
+              f"{r['tok_per_s']},{r['p50_ms']},{r['p95_ms']},"
+              f"{r['ttft_p50_ms']},{r['ttft_p95_ms']},{r['syncs']},"
               f"{r['ref_tok_per_s']},{r['speedup']}")
     het = [r for r in out["rows"] if r["config"].startswith("het-")]
     if het:
@@ -368,11 +386,13 @@ def main(out=None) -> None:
               f"(page_size={h.get('page_size')}, pool="
               f"{h.get('pool_pages')} pages) vs monolithic "
               f"(max_len={h.get('max_len')})")
-        print("config,slots,tokens,tok_per_s,p50_ms,p95_ms,syncs,kv_mb,"
-              "peak_used_mb,kv_ratio,speedup_vs_mono,admission_waits")
+        print("config,slots,tokens,tok_per_s,p50_ms,p95_ms,ttft_p50_ms,"
+              "ttft_p95_ms,syncs,kv_mb,peak_used_mb,kv_ratio,"
+              "speedup_vs_mono,admission_waits")
         for r in het:
             print(f"{r['config']},{r['slots']},{r['tokens']},"
                   f"{r['tok_per_s']},{r['p50_ms']},{r['p95_ms']},"
+                  f"{r['ttft_p50_ms']},{r['ttft_p95_ms']},"
                   f"{r['syncs']},{r['kv_mb']},{r.get('peak_used_mb', '')},"
                   f"{r.get('kv_ratio', '')},{r.get('speedup_vs_mono', '')},"
                   f"{r.get('admission_waits', '')}")
@@ -382,11 +402,12 @@ def main(out=None) -> None:
               f"k drafts (self or nm-packed) + one dense block verify "
               f"per step, vs het-paged")
         print("config,slots,tokens,tok_per_s,acceptance_rate,p50_ms,"
-              "p95_ms,syncs,speedup_vs_paged")
+              "p95_ms,ttft_p50_ms,ttft_p95_ms,syncs,speedup_vs_paged")
         for r in spec:
             print(f"{r['config']},{r['slots']},{r['tokens']},"
                   f"{r['tok_per_s']},{r['acceptance_rate']},"
-                  f"{r['p50_ms']},{r['p95_ms']},{r['syncs']},"
+                  f"{r['p50_ms']},{r['p95_ms']},{r['ttft_p50_ms']},"
+                  f"{r['ttft_p95_ms']},{r['syncs']},"
                   f"{r['speedup_vs_paged']}")
 
 

@@ -8,19 +8,22 @@ Per-section metrics (rows matched by key; unmatched rows are informational
 only, so grid changes don't fail the gate):
 
   * ``kernels`` — ``us`` per kernel row (lower is better)
-  * ``serving`` — ``tok_per_s`` per (config, slots) row (higher is better)
+  * ``serving`` — ``tok_per_s`` (higher is better) and ``ttft_p95_ms``
+    (time-to-first-token p95, lower is better) per (config, slots) row
 
-A row regresses when it is worse than baseline by more than ``threshold``
-(relative).  Keys present in only one of {baseline, current} are
-reported but never block: a benchmark's *first* run (new row, no
-baseline yet) and a retired benchmark (baseline row gone from current)
-both pass — new benchmarks must be able to land without failing the
-blocking job they'll feed.  Rows missing the section metric (or with a
-non-numeric value) are skipped the same way.  Missing/corrupt baseline
-(e.g. the first run on a branch, or an expired artifact) exits 0 — the
-gate only *blocks* when there is something real to compare, per the
-ROADMAP note: non-blocking until a baseline exists, blocking on >30%
-regressions after.
+A row regresses when any of its gated metrics is worse than baseline by
+more than ``threshold`` (relative).  Keys present in only one of
+{baseline, current} are reported but never block: a benchmark's *first*
+run (new row, no baseline yet) and a retired benchmark (baseline row
+gone from current) both pass — new benchmarks must be able to land
+without failing the blocking job they'll feed.  The same one-sided rule
+applies per metric: a *new metric* on an old row (e.g. the first run
+that records TTFT) is reported but never blocks.  Rows missing every
+section metric (or with non-numeric values) are skipped the same way.
+Missing/corrupt baseline (e.g. the first run on a branch, or an expired
+artifact) exits 0 — the gate only *blocks* when there is something real
+to compare, per the ROADMAP note: non-blocking until a baseline exists,
+blocking on >30% regressions after.
 
 Stdlib-only on purpose: CI runs it without installing the package.
 """
@@ -31,47 +34,67 @@ import argparse
 import json
 import sys
 
-# section name → (row key fields, metric, higher_is_better)
+# section name → (row key fields, ((metric, higher_is_better), ...))
 METRICS = {
-    "kernels": (("kernel",), "us", False),
-    "serving": (("config", "slots"), "tok_per_s", True),
+    "kernels": (("kernel",), (("us", False),)),
+    "serving": (("config", "slots"), (("tok_per_s", True),
+                                      ("ttft_p95_ms", False))),
 }
 
 
 def _rows(record: dict, section: str):
+    """{row key: {metric: value}} — rows with no usable metric drop."""
     data = record.get("sections", {}).get(section, {}).get("data") or {}
     out = {}
-    keys, metric, _ = METRICS[section]
+    keys, metrics = METRICS[section]
     for row in data.get("rows", []):
         try:
-            out[tuple(row[k] for k in keys)] = float(row[metric])
-        except (KeyError, TypeError, ValueError):
+            key = tuple(row[k] for k in keys)
+        except KeyError:
             continue
+        vals = {}
+        for metric, _ in metrics:
+            try:
+                vals[metric] = float(row[metric])
+            except (KeyError, TypeError, ValueError):
+                continue
+        if vals:
+            out[key] = vals
     return out
 
 
 def compare(baseline: dict, current: dict, threshold: float):
     """Returns (report_lines, regressions)."""
     lines, regressions = [], []
-    for section, (_, metric, higher_better) in METRICS.items():
+    for section, (_, metrics) in METRICS.items():
         base, cur = _rows(baseline, section), _rows(current, section)
         for key in sorted(cur, key=str):
             if key not in base:
-                lines.append(f"  {section} {key}: {metric}={cur[key]:g} "
+                shown = ", ".join(f"{m}={v:g}" for m, v in cur[key].items())
+                lines.append(f"  {section} {key}: {shown} "
                              "(new row, no baseline)")
                 continue
-            b, c = base[key], cur[key]
-            if b <= 0:
-                continue
-            change = (c - b) / b
-            worse = -change if higher_better else change
-            flag = "REGRESSION" if worse > threshold else "ok"
-            lines.append(f"  {section} {key}: {metric} {b:g} -> {c:g} "
-                         f"({change:+.1%}) {flag}")
-            if worse > threshold:
-                regressions.append((section, key, b, c))
+            for metric, higher_better in metrics:
+                if metric not in cur[key]:
+                    continue
+                c = cur[key][metric]
+                if metric not in base[key]:
+                    lines.append(f"  {section} {key}: {metric}={c:g} "
+                                 "(new metric, no baseline)")
+                    continue
+                b = base[key][metric]
+                if b <= 0:
+                    continue
+                change = (c - b) / b
+                worse = -change if higher_better else change
+                flag = "REGRESSION" if worse > threshold else "ok"
+                lines.append(f"  {section} {key}: {metric} {b:g} -> {c:g} "
+                             f"({change:+.1%}) {flag}")
+                if worse > threshold:
+                    regressions.append((section, key, metric, b, c))
         for key in sorted(set(base) - set(cur), key=str):
-            lines.append(f"  {section} {key}: {metric}={base[key]:g} "
+            shown = ", ".join(f"{m}={v:g}" for m, v in base[key].items())
+            lines.append(f"  {section} {key}: {shown} "
                          "(row absent from current run — informational)")
     return lines, regressions
 
@@ -103,8 +126,9 @@ def main(argv=None) -> int:
     for ln in lines:
         print(ln)
     if regressions:
-        print(f"{len(regressions)} row(s) regressed by more than "
-              f"{args.threshold:.0%}")
+        print(f"{len(regressions)} metric(s) regressed by more than "
+              f"{args.threshold:.0%} across "
+              f"{len({r[:2] for r in regressions})} row(s)")
         return 1
     print("no regression beyond threshold")
     return 0

@@ -69,7 +69,7 @@ def main() -> int:
     from repro import models as MZ
     from repro.checkpoint import restore_latest
     from repro.launch.mesh import make_elastic_mesh
-    from repro.serving import ServeConfig, Server
+    from repro.serving import Engine, ServeConfig
 
     mod = C._module(args.arch)
     cfg = mod.reduced() if args.reduced else mod.config()
@@ -94,7 +94,7 @@ def main() -> int:
                        page_size=args.page_size, num_pages=args.num_pages,
                        prompt_buckets=args.prompt_buckets,
                        spec_k=spec_k, spec_draft=args.spec_draft)
-    server = Server(cfg, mesh, scfg, params)
+    server = Engine(cfg, mesh, scfg, params)
 
     rng_np = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -106,10 +106,13 @@ def main() -> int:
     done = server.run()
     dt = time.time() - t0
     toks = sum(len(r.out) for r in done)
+    ttfts = sorted(server.ttfts_s())
     report = {
         "arch": cfg.name, "requests": len(done),
         "generated_tokens": toks, "wall_s": round(dt, 2),
         "tok_per_s": round(toks / dt, 1),
+        "ttft_p50_ms": round(1e3 * ttfts[len(ttfts) // 2], 2)
+        if ttfts else None,
         "decode_chunk": scfg.decode_chunk,
         "host_syncs": server.sync_count,
         "prefills": server.stats["prefills"],

@@ -1,5 +1,34 @@
-from repro.serving.engine import (  # noqa: F401
-    Request, ServeConfig, Server, build_decode_loop, build_decode_step,
-    build_paged_decode_loop, build_paged_prefill_slot_step,
-    build_prefill_slot_step, build_prefill_step, build_spec_decode_loop,
-    init_decode_state, sample_token, sample_token_folded)
+"""Serving package: the streaming Engine (v2) plus the deprecated v1
+``Server`` surface.
+
+v2 (``serving.api``): ``Engine.submit() -> RequestHandle``,
+``Engine.step() -> list[TokenEvent]``, per-handle token iterators,
+mid-run admission, ``cancel()``.  v1 (``serving.engine``): the
+batch-style ``Server`` shim and the old loop-builder signatures.
+"""
+
+from repro.serving.api import Engine, RequestHandle
+from repro.serving.config import ServeConfig
+from repro.serving.state import (Request, RequestStatus, TokenEvent,
+                                 init_decode_state, sample_token,
+                                 sample_token_folded, sample_token_slots)
+from repro.serving.backends import (CacheBackend, MonoBackend,
+                                    PagedBackend)
+from repro.serving.engine import (Server, build_decode_loop,
+                                  build_decode_step,
+                                  build_paged_decode_loop,
+                                  build_paged_prefill_slot_step,
+                                  build_prefill_slot_step,
+                                  build_prefill_step,
+                                  build_prefill_wave_step,
+                                  build_spec_decode_loop)
+
+__all__ = [
+    "Engine", "RequestHandle", "TokenEvent", "Request", "RequestStatus",
+    "ServeConfig", "Server", "CacheBackend", "MonoBackend", "PagedBackend",
+    "init_decode_state", "sample_token", "sample_token_folded",
+    "sample_token_slots", "build_decode_loop", "build_decode_step",
+    "build_paged_decode_loop", "build_paged_prefill_slot_step",
+    "build_prefill_slot_step", "build_prefill_step",
+    "build_prefill_wave_step", "build_spec_decode_loop",
+]

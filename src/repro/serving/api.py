@@ -1,0 +1,547 @@
+"""Serving API v2: the streaming :class:`Engine`.
+
+One scheduler, pluggable cache backends, request-level control:
+
+  * ``submit(prompt, *, max_new=None, temperature=None, stream=False)``
+    → :class:`RequestHandle` — admission is *mid-flight*: submit at any
+    time, the next ``step()`` fills whatever slots are free.
+  * ``step()`` → ``list[TokenEvent]`` — ONE scheduler tick: apply
+    pending cancellations, admit queued requests into free slots
+    (per-slot prefill, zero host syncs; whole-batch wave prefill when
+    every slot is free), then run ONE on-device decode chunk and make
+    the single device→host fetch.  All tokens the tick produced come
+    back in emission order.
+  * ``cancel(handle)`` — takes effect at the next chunk boundary: the
+    slot is retired, its pages return to the pool, and the request
+    never emits another token.
+  * ``run()`` / ``generate()`` — drain-the-queue convenience wrappers
+    over ``step()`` (what the deprecated ``Server`` shim calls).
+  * iterating a handle streams its tokens in order, driving ``step()``
+    on demand — single-threaded streaming with no background thread.
+
+The scheduler is cache-layout agnostic: everything monolithic-vs-paged
+lives behind the :class:`~repro.serving.backends.CacheBackend` the
+engine builds from ``ServeConfig``.  Temperature is per-request on the
+plain decode loops (a traced per-slot vector — greedy and sampled
+requests batch together); the speculative loop runs the uniform
+``scfg.temperature`` because residual acceptance needs draft and verify
+distributions at one temperature.
+
+Sync contract: ``step()`` performs exactly one device→host transfer
+when any slot is live (the token block) and zero otherwise; admission
+and prefill perform none — the first sampled token rides back in the
+next chunk's block.  Greedy output is bit-identical to the pre-v2
+``Server`` for monolithic, paged and speculative configs.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro import models as MZ
+from repro.distributed import sharding as SH
+from repro.kernels import dispatch
+from repro.models.config import ModelConfig
+from repro.serving.backends import CacheBackend, make_backend
+from repro.serving.config import ServeConfig
+from repro.serving.state import (Request, RequestStatus, TokenEvent,
+                                 _fresh_stats, init_decode_state)
+
+
+def _fetch(tree: Any) -> Any:
+    """Resolve the single device→host transfer through the deprecated
+    ``repro.serving.engine`` module, so tests that monkeypatch
+    ``engine._device_fetch`` keep intercepting every sync."""
+    from repro.serving import engine as _compat
+    return _compat._device_fetch(tree)
+
+
+class RequestHandle:
+    """Caller-side view of one submitted request.
+
+    Iterating the handle yields its tokens in emission order, calling
+    ``engine.step()`` whenever the buffered stream runs dry — so
+    ``for tok in handle:`` streams tokens as the scheduler produces
+    them, interleaved with any other live requests.
+    """
+
+    def __init__(self, engine: "Engine", req: Request):
+        self._engine = engine
+        self._req = req
+
+    @property
+    def uid(self) -> int:
+        return self._req.uid
+
+    @property
+    def status(self) -> RequestStatus:
+        return self._req.status
+
+    @property
+    def done(self) -> bool:
+        return self._req.status in (RequestStatus.DONE,
+                                    RequestStatus.CANCELLED)
+
+    @property
+    def slot(self) -> Optional[int]:
+        return self._req.slot
+
+    @property
+    def tokens(self) -> List[int]:
+        """Tokens emitted so far (a copy; safe to mutate)."""
+        return list(self._req.out)
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        return self._req.ttft_s
+
+    def cancel(self) -> None:
+        self._engine.cancel(self)
+
+    def result(self) -> List[int]:
+        """Drive the engine until this request finishes; returns its
+        full output."""
+        for _ in self:
+            pass
+        return self.tokens
+
+    def __iter__(self) -> Iterator[int]:
+        i = 0
+        while True:
+            out = self._req.out
+            while i < len(out):
+                yield out[i]
+                i += 1
+            if self.done:
+                return
+            events = self._engine.step()
+            if (not events and not self.done
+                    and self._req.status is RequestStatus.QUEUED
+                    and not self._engine.num_live):
+                raise RuntimeError(
+                    f"engine made no progress on request {self.uid} "
+                    "(queued, no live slots, empty tick)")
+
+    def __repr__(self) -> str:
+        return (f"RequestHandle(uid={self.uid}, "
+                f"status={self._req.status.value}, "
+                f"tokens={len(self._req.out)})")
+
+
+def _build_plans(params: Any, draft_params: Any, cfg: ModelConfig,
+                 scfg: ServeConfig) -> Dict[str, list]:
+    """Dispatch plans per phase geometry.
+
+    Kernel/mode/blocks are resolved per packed weight at each phase's
+    real geometry (apply_linear flattens leading dims into M): wave
+    prefill runs ``M = slots*prompt_pad``, per-slot refill
+    ``M = prompt_pad`` (entries carry their M), decode one token per
+    slot (``M = slots``).  Speculative phases get their own rows — the
+    draft re-plans the (usually sparse-packed) draft weights at the
+    decode geometry, the verify plans the dense weights at
+    ``M = slots*(spec_k+1)``; under paging both plans additionally
+    carry the paged-attention decision (its own page-shaped key).
+    """
+    plans = {
+        "prefill": (dispatch.plan_params(params,
+                                         M=scfg.slots * scfg.prompt_pad)
+                    + dispatch.plan_params(params, M=scfg.prompt_pad)),
+        "decode": dispatch.plan_params(params, M=scfg.slots),
+        "draft": [], "verify": [],
+    }
+    if scfg.spec:
+        plans["draft"] = dispatch.plan_params(draft_params, M=scfg.slots)
+        plans["verify"] = dispatch.plan_params(
+            params, M=scfg.slots * (scfg.spec_k + 1))
+        # a speculative decode chunk runs both phases — its plan carries
+        # the draft rows (the sparse kernels doing the per-token work)
+        # and the verify-shaped rows
+        plans["decode"] = plans["decode"] + plans["draft"] + plans["verify"]
+    if scfg.paged:
+        pa = dispatch.plan_paged_attention(
+            cfg, batch=scfg.slots, page_size=scfg.page_size,
+            max_pages=scfg.max_pages)
+        plans["prefill"] = plans["prefill"] + [pa]
+        plans["decode"] = plans["decode"] + [pa]
+        if scfg.spec:
+            # the verify scores spec_k+1 queries per slot — its
+            # paged-attention row is keyed at the block geometry
+            pav = dispatch.plan_paged_attention(
+                cfg, batch=scfg.slots * (scfg.spec_k + 1),
+                page_size=scfg.page_size, max_pages=scfg.max_pages)
+            plans["verify"] = plans["verify"] + [pav]
+            plans["decode"] = plans["decode"] + [pav]
+    return plans
+
+
+class Engine:
+    """Slot-based continuous batching on one mesh, request-level API.
+
+    Every slot carries its own position counter, done mask, token budget
+    and sampling temperature — all device-resident between host syncs.
+    Finished (or cancelled) slots are refilled at the next chunk
+    boundary by a per-slot prefill that writes only that slot's cache
+    rows; in-flight slots never stall.
+
+    ``stats`` records per-chunk wall time and emitted-token counts (the
+    serving benchmark derives per-token latency percentiles from them);
+    ``sync_count`` counts device→host transfers (the one-per-chunk
+    contract); per-request TTFT lives on the :class:`Request` records.
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                 params: Any, draft_params: Any = None):
+        scfg.validate()
+        self.cfg, self.mesh, self.scfg = cfg, mesh, scfg
+        self.params = params
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._uid = itertools.count()
+        self._key = jax.random.key(scfg.seed)
+        self.sync_count = 0
+        self.stats: Dict[str, Any] = _fresh_stats()
+
+        if scfg.spec and draft_params is None:
+            if scfg.spec_draft == "pack":
+                from repro.core.sparse_linear import make_draft_params
+                draft_params = make_draft_params(params, cfg)
+            else:                                   # "self"
+                draft_params = params
+        self.draft_params = draft_params
+
+        plans = _build_plans(params, self.draft_params, cfg, scfg)
+        self.prefill_plan = plans["prefill"]
+        self.decode_plan = plans["decode"]
+        self.draft_plan = plans["draft"]
+        self.verify_plan = plans["verify"]
+        self.dispatch_plan = self.prefill_plan      # back-compat alias
+
+        self._abstract_params = jax.eval_shape(lambda: params)
+        self._abstract_draft = (jax.eval_shape(lambda: self.draft_params)
+                                if scfg.spec else None)
+        self._abstract_cache = jax.eval_shape(
+            lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len,
+                                  page_size=scfg.page_size,
+                                  num_pages=scfg.pool_pages))
+        cspecs = SH.cache_specs(self._abstract_cache, cfg, mesh,
+                                kv_mode=scfg.kv_mode)
+        # hoisted: jitted once here, not per wave inside the serve loop
+        self._init_cache = jax.jit(
+            lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len,
+                                  page_size=scfg.page_size,
+                                  num_pages=scfg.pool_pages),
+            out_shardings=SH.named(mesh, cspecs))
+
+        self._backend: CacheBackend = make_backend(
+            cfg, mesh, scfg, self._abstract_params, self._abstract_draft,
+            self._abstract_cache, self.stats)
+        self._slot_req: List[Optional[Request]] = [None] * scfg.slots
+        self._temps = np.full((scfg.slots,), scfg.temperature, np.float32)
+        self._cache = None
+        self._state = None
+
+    # --- introspection / stats ----------------------------------------
+
+    @property
+    def num_live(self) -> int:
+        """Slots currently decoding a request."""
+        return sum(r is not None for r in self._slot_req)
+
+    @property
+    def num_queued(self) -> int:
+        return len(self.queue)
+
+    def reset_stats(self) -> None:
+        """Zero the serving counters — including the speculative
+        drafted/accepted tallies behind :meth:`acceptance_rate` —
+        (benchmarks call this after their compile warm-up pass)."""
+        self.sync_count = 0
+        self.stats.clear()                  # in place: the backend and
+        self.stats.update(_fresh_stats())   # callers hold references
+
+    def acceptance_rate(self) -> float:
+        """Accepted / drafted tokens since the last ``reset_stats`` (1.0
+        for a draft the verifier never corrects; 0.0 with speculation
+        off or before any chunk ran)."""
+        return self.stats["accepted"] / max(self.stats["drafted"], 1)
+
+    def cache_bytes(self) -> int:
+        """Allocated KV/state cache footprint in bytes (the buffers
+        ``init_cache`` materializes — pool + tables for paged, the full
+        ``slots × max_len`` block for monolithic)."""
+        return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree.leaves(self._abstract_cache))
+
+    def ttfts_s(self) -> List[float]:
+        """TTFT of every finished request that emitted a token."""
+        return [r.ttft_s for r in self.finished if r.ttft_s is not None]
+
+    # --- request intake -----------------------------------------------
+
+    def _coerce_prompt(self, prompt: Union[Sequence[int], np.ndarray]
+                       ) -> np.ndarray:
+        arr = np.asarray(prompt)
+        if arr.ndim != 1:
+            raise ValueError(
+                f"prompt must be 1-D (one request), got shape {arr.shape}")
+        if arr.size == 0:
+            raise ValueError("prompt is empty — nothing to prefill")
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(
+                f"prompt must hold integer token ids, got dtype "
+                f"{arr.dtype}")
+        if arr.size > self.scfg.max_len - 1:
+            raise ValueError(
+                f"prompt of {arr.size} tokens cannot fit max_len="
+                f"{self.scfg.max_len} with room to decode (limit is "
+                f"max_len - 1 = {self.scfg.max_len - 1})")
+        return arr.astype(np.int32)
+
+    def submit(self, prompt: Union[Sequence[int], np.ndarray], *,
+               max_new: Optional[int] = None,
+               temperature: Optional[float] = None,
+               stream: bool = False) -> RequestHandle:
+        """Queue one request; returns its :class:`RequestHandle`.
+
+        ``prompt`` may be a Python list or any 1-D integer array.
+        Prompts longer than the prefill window are *left-truncated* to
+        their most recent ``prompt_rows`` tokens (the v1 behavior —
+        standard context-window semantics); prompts that cannot fit the
+        cache at all (> ``max_len - 1``) are rejected here.  ``max_new``
+        defaults to ``scfg.max_new_tokens``; ``temperature`` defaults to
+        ``scfg.temperature`` and may differ per request on the
+        non-speculative loops (0 → greedy).  Admission happens at the
+        next ``step()`` — submitting mid-run is the point.
+        """
+        scfg = self.scfg
+        arr = self._coerce_prompt(prompt)
+        if max_new is None:
+            max_new = scfg.max_new_tokens
+        if max_new <= 0:
+            raise ValueError(f"max_new must be positive, got {max_new}")
+        if temperature is not None and scfg.spec \
+                and float(temperature) != scfg.temperature:
+            raise ValueError(
+                "per-request temperature is not supported with "
+                "speculative decoding (residual acceptance needs draft "
+                "and verify at one temperature) — set "
+                "ServeConfig.temperature instead")
+        if scfg.paged:
+            need = scfg.request_pages(len(arr), max_new)
+            if need > scfg.pool_pages:
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{scfg.pool_pages} — raise num_pages")
+        req = Request(uid=next(self._uid), prompt=arr, max_new=max_new,
+                      temperature=temperature, stream=stream)
+        self.queue.append(req)
+        return RequestHandle(self, req)
+
+    def cancel(self, handle: Union[RequestHandle, Request, int]) -> None:
+        """Request cancellation; takes effect at the next chunk
+        boundary (the slot is retired and its pages freed before the
+        next decode chunk, so no further tokens are ever emitted)."""
+        if isinstance(handle, RequestHandle):
+            req = handle._req
+        elif isinstance(handle, Request):
+            req = handle
+        else:
+            req = next((r for r in self.queue + self._slot_req
+                        if r is not None and r.uid == handle), None)
+            if req is None:
+                return
+        if req.status in (RequestStatus.DONE, RequestStatus.CANCELLED):
+            return
+        req.cancel_requested = True
+
+    # --- the scheduler tick -------------------------------------------
+
+    def _pad_prompt(self, r: Request, rows: Optional[int] = None
+                    ) -> np.ndarray:
+        width = rows or self.scfg.prompt_pad
+        tokens = np.zeros((1, width), np.int32)
+        L = min(len(r.prompt), width)
+        tokens[0, width - L:] = r.prompt[-L:]                  # left-pad
+        return tokens
+
+    def _ensure_device_state(self) -> None:
+        if self._cache is None:
+            self._cache = self._init_cache()
+            self._state = init_decode_state(self.scfg.slots)
+
+    def _finish(self, req: Request, slot: Optional[int],
+                status: RequestStatus, now: float) -> None:
+        req.done = True
+        req.status = status
+        req.finish_s = now
+        self.finished.append(req)
+        if slot is not None:
+            self._slot_req[slot] = None
+            self._backend.retire(slot)
+
+    def _apply_cancels(self) -> None:
+        """Chunk-boundary cancellation: freeze the slot's device state
+        (no fetch — two scalar updates ride host→device), retire it in
+        the backend (pages freed), and drop cancelled queue entries."""
+        now = time.perf_counter()
+        for i, r in enumerate(self._slot_req):
+            if r is not None and r.cancel_requested:
+                self._state = dict(
+                    self._state,
+                    done=self._state["done"].at[i].set(True),
+                    left=self._state["left"].at[i].set(0))
+                self._finish(r, i, RequestStatus.CANCELLED, now)
+        for r in [r for r in self.queue if r.cancel_requested]:
+            self.queue.remove(r)
+            self._finish(r, None, RequestStatus.CANCELLED, now)
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue (FIFO).  When EVERY slot is
+        free and the backend supports it, one batched wave prefill
+        replaces ``slots`` per-slot dispatches; otherwise per-slot
+        refill — live slots keep decoding from their positions.
+        Admission gated by the backend (paged: worst-case reservation;
+        head-of-line blocking keeps FIFO fairness)."""
+        scfg = self.scfg
+        wave = self._backend.wave_step() if self.queue \
+            and self.num_live == 0 else None
+        if wave is not None:
+            take = self.queue[:scfg.slots]
+            del self.queue[:scfg.slots]
+            prompts = np.zeros((scfg.slots, scfg.prompt_pad), np.int32)
+            budgets = np.zeros(scfg.slots, np.int32)
+            valid = np.zeros(scfg.slots, bool)
+            for i, r in enumerate(take):
+                prompts[i] = self._pad_prompt(r)[0]
+                budgets[i] = r.max_new
+                valid[i] = True
+                self._temps[i] = (scfg.temperature if r.temperature is None
+                                  else r.temperature)
+                self._backend.admit(i, len(r.prompt), r.max_new)
+                r.slot, r.status = i, RequestStatus.RUNNING
+                self._slot_req[i] = r
+            self._key, sk = jax.random.split(self._key)
+            self._cache, self._state = wave(
+                self.params, {"tokens": jnp.asarray(prompts)}, self._cache,
+                jnp.asarray(valid), jnp.asarray(budgets),
+                jnp.asarray(self._temps), sk)
+            self.stats["prefills"] += len(take)
+            return
+        for i in range(scfg.slots):
+            if self._slot_req[i] is not None or not self.queue:
+                continue
+            r = self.queue[0]
+            if not self._backend.can_admit(len(r.prompt), r.max_new):
+                self.stats["admission_waits"] += 1
+                break
+            self.queue.pop(0)
+            rows = self._backend.admit(i, len(r.prompt), r.max_new)
+            temp = (scfg.temperature if r.temperature is None
+                    else r.temperature)
+            self._key, sk = jax.random.split(self._key)
+            self._cache, self._state = self._backend.prefill_step(rows)(
+                self.params, {"tokens": jnp.asarray(self._pad_prompt(r, rows))},
+                self._cache, self._state, jnp.asarray(i, jnp.int32),
+                jnp.asarray(r.max_new, jnp.int32),
+                jnp.asarray(temp, jnp.float32), sk,
+                *self._backend.prefill_args(i))
+            self._temps[i] = temp
+            r.slot, r.status = i, RequestStatus.RUNNING
+            self._slot_req[i] = r
+            self.stats["prefills"] += 1
+
+    def _run_chunk(self, loop, key, extra):
+        """Invoke one decode chunk and make the single device→host fetch
+        — the speculative loop's drafted/accepted counters ride in the
+        same transfer."""
+        if self.scfg.spec:
+            cache, state, tokens, emitted, dr, ac = loop(
+                self.params, self.draft_params, self._cache, self._state,
+                key, *extra)
+            blk, emit, done, dr, ac = _fetch(
+                (tokens, emitted, state["done"], dr, ac))
+            self.stats["drafted"] += int(dr)
+            self.stats["accepted"] += int(ac)
+        else:
+            cache, state, tokens, emitted = loop(
+                self.params, self._cache, self._state,
+                jnp.asarray(self._temps), key, *extra)
+            blk, emit, done = _fetch((tokens, emitted, state["done"]))
+        self._cache, self._state = cache, state
+        self.sync_count += 1
+        return blk, emit, done
+
+    def _collect(self, blk, emit, done, dt: float) -> List[TokenEvent]:
+        """Distribute one fetched token block in emission order, stamp
+        TTFTs, record the chunk stats, and retire finished slots."""
+        scfg = self.scfg
+        now = time.perf_counter()
+        emitted: List[tuple] = []           # (request, index-in-output)
+        for t in range(blk.shape[0]):       # chunk_tokens rows under spec
+            for i in range(scfg.slots):
+                r = self._slot_req[i]
+                if emit[t, i] and r is not None:
+                    r.out.append(int(blk[t, i]))
+                    if r.first_token_s is None:
+                        r.first_token_s = now
+                    self._backend.note_commit(i)
+                    emitted.append((r, len(r.out) - 1))
+        self.stats["chunk_s"].append(dt)
+        self.stats["chunk_tokens"].append(len(emitted))
+        for i in range(scfg.slots):
+            r = self._slot_req[i]
+            if r is not None and done[i]:
+                self._finish(r, i, RequestStatus.DONE, now)
+        return [TokenEvent(uid=r.uid, token=r.out[idx], index=idx,
+                           final=(r.done and idx == len(r.out) - 1))
+                for r, idx in emitted]
+
+    def step(self) -> List[TokenEvent]:
+        """One scheduler tick: cancellations → admission (+ prefill) →
+        one decode chunk → the single fetch.  Returns every token the
+        tick emitted, in emission order; an empty list means nothing is
+        live (queue empty or admission fully blocked)."""
+        with self.mesh:
+            self._ensure_device_state()
+            self._apply_cancels()
+            self._admit()
+            live = [i for i, r in enumerate(self._slot_req)
+                    if r is not None]
+            if not live:
+                return []
+            loop, extra = self._backend.begin_chunk(live)
+            self._key, sk = jax.random.split(self._key)
+            t0 = time.perf_counter()
+            blk, emit, done = self._run_chunk(loop, sk, extra)
+            dt = time.perf_counter() - t0
+            events = self._collect(blk, emit, done, dt)
+            self._backend.end_chunk(
+                [i for i in live if self._slot_req[i] is not None])
+        return events
+
+    # --- convenience wrappers -----------------------------------------
+
+    def run(self) -> List[Request]:
+        """Serve until the queue drains; returns the finished-request
+        records (cumulative across calls, like the v1 ``Server``)."""
+        while self.queue or self.num_live:
+            if not self.step() and not self.num_live:
+                break               # admission blocked with nothing live
+        return self.finished
+
+    def generate(self, prompts: Sequence[Any], *,
+                 max_new: Optional[int] = None,
+                 temperature: Optional[float] = None) -> List[List[int]]:
+        """Submit a batch of prompts, serve to completion, and return
+        each request's tokens in submission order."""
+        handles = [self.submit(p, max_new=max_new, temperature=temperature)
+                   for p in prompts]
+        self.run()
+        return [h.tokens for h in handles]

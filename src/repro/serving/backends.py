@@ -1,0 +1,282 @@
+"""Cache backends: the layout-specific half of the serving engine.
+
+The scheduler in ``serving.api`` is layout-agnostic — every place the
+old monolithic ``Server`` forked on ``scfg.paged`` is now a method on a
+:class:`CacheBackend`:
+
+  * :class:`MonoBackend` — the monolithic ``(slots, max_len, …)`` KV
+    cache.  Admission always succeeds, retirement is free, and the
+    whole-batch wave-prefill fast path is available.
+  * :class:`PagedBackend` — the shared page pool + per-slot page tables.
+    Owns the host-side allocator: worst-case page *reservation* at
+    admission (requests wait instead of OOMing), lazy physical
+    allocation at prefill/chunk boundaries, page recycling and table
+    nulling at retirement, per-request prompt buckets, and the decode
+    attention view narrowed to the live slots' page bucket.
+
+Everything here is host arithmetic over already-fetched state plus
+host→device argument passing (the page table): backends never add a
+device→host sync, so the one-fetch-per-chunk contract is theirs to keep
+by construction.  Both backends build and cache their jitted programs
+(per prompt-bucket prefill steps, per view-bucket decode loops) through
+``serving.loops``; the speculative loop is selected by ``scfg.spec``
+inside the shared base — one spec builder serves both layouts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.models.config import ModelConfig
+from repro.serving import loops
+from repro.serving.config import ServeConfig
+
+
+class CacheBackend(Protocol):
+    """What the scheduler needs from a cache layout.
+
+    Lifecycle per request: ``can_admit`` → ``admit`` (reserve + return
+    the prompt-row width) → ``prefill_step``/``prefill_args`` (the jitted
+    program and its layout-specific extra operands) → per chunk
+    ``begin_chunk`` (returns the decode loop + extra traced args) /
+    ``note_commit`` (a token landed) / ``end_chunk`` — then ``retire``.
+    """
+    paged: bool
+
+    def prompt_rows(self, prompt_len: int) -> int: ...
+    def can_admit(self, prompt_len: int, max_new: int) -> bool: ...
+    def admit(self, slot: int, prompt_len: int, max_new: int) -> int: ...
+    def prefill_step(self, rows: int) -> Callable: ...
+    def prefill_args(self, slot: int) -> Tuple: ...
+    def wave_step(self) -> Optional[Callable]: ...
+    def begin_chunk(self, live_slots: List[int]) -> Tuple[Callable, Tuple]:
+        ...
+    def note_commit(self, slot: int) -> None: ...
+    def end_chunk(self, live_slots: List[int]) -> None: ...
+    def retire(self, slot: int) -> None: ...
+
+
+class _BackendBase:
+    """Shared jitted-program caches (decode loops keyed by view bucket,
+    prefill steps keyed by prompt rows)."""
+
+    paged = False
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                 abstract_params: Any, abstract_draft: Any,
+                 abstract_cache: Any, stats: Dict[str, Any]):
+        self.cfg, self.mesh, self.scfg = cfg, mesh, scfg
+        self._ap, self._ad, self._ac = (abstract_params, abstract_draft,
+                                        abstract_cache)
+        self.stats = stats
+        self._prefill_steps: Dict[int, Callable] = {}
+        self._decode_loops: Dict[Optional[int], Callable] = {}
+        self._wave: Optional[Callable] = None
+
+    def prefill_step(self, rows: int) -> Callable:
+        fn = self._prefill_steps.get(rows)
+        if fn is None:
+            fn = loops.build_prefill_slot_step(
+                self.cfg, self.mesh, self.scfg, self._ap, self._ac,
+                prompt_rows=rows, paged=self.paged)
+            self._prefill_steps[rows] = fn
+        return fn
+
+    def _decode_loop(self, view: Optional[int]) -> Callable:
+        fn = self._decode_loops.get(view)
+        if fn is None:
+            if self.scfg.spec:
+                fn = loops.build_spec_decode_loop(
+                    self.cfg, self.mesh, self.scfg, self._ap, self._ad,
+                    self._ac, paged=self.paged, view_pages=view)
+            else:
+                fn = loops.build_decode_loop(
+                    self.cfg, self.mesh, self.scfg, self._ap, self._ac,
+                    paged=self.paged, view_pages=view)
+            self._decode_loops[view] = fn
+        return fn
+
+
+class MonoBackend(_BackendBase):
+    """Monolithic ``slots × max_len`` cache: no allocator, no extra loop
+    operands, and the wave-prefill fast path."""
+
+    paged = False
+
+    def prompt_rows(self, prompt_len: int) -> int:
+        return self.scfg.prompt_pad
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        return True
+
+    def admit(self, slot: int, prompt_len: int, max_new: int) -> int:
+        return self.scfg.prompt_pad
+
+    def prefill_args(self, slot: int) -> Tuple:
+        return ()
+
+    def wave_step(self) -> Optional[Callable]:
+        if self._wave is None:
+            self._wave = loops.build_prefill_wave_step(
+                self.cfg, self.mesh, self.scfg, self._ap, self._ac)
+        return self._wave
+
+    def begin_chunk(self, live_slots: List[int]) -> Tuple[Callable, Tuple]:
+        return self._decode_loop(None), ()
+
+    def note_commit(self, slot: int) -> None:
+        pass
+
+    def end_chunk(self, live_slots: List[int]) -> None:
+        pass
+
+    def retire(self, slot: int) -> None:
+        pass
+
+
+class PagedBackend(_BackendBase):
+    """Shared page pool + per-slot page tables (see ``models.attention``
+    for the device layout).  The admission *reservation* guarantees a
+    request, once admitted, can always reach its budget: live slots can
+    never starve mid-decode, waiting happens at admission instead."""
+
+    paged = True
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        scfg = self.scfg
+        self.free_pages: List[int] = list(range(scfg.pool_pages, 0, -1))
+        self.reserved = 0
+        self.slot_pages: List[List[int]] = [[] for _ in range(scfg.slots)]
+        self.slot_need = [0] * scfg.slots
+        self.slot_rows = [0] * scfg.slots
+        self.ptab = np.zeros((scfg.slots, scfg.max_pages), np.int32)
+
+    # --- admission / prefill ------------------------------------------
+
+    def prompt_rows(self, prompt_len: int) -> int:
+        return self.scfg.prompt_rows(prompt_len)
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        need = self.scfg.request_pages(prompt_len, max_new)
+        return self.reserved + need <= self.scfg.pool_pages
+
+    def admit(self, slot: int, prompt_len: int, max_new: int) -> int:
+        scfg = self.scfg
+        rows = scfg.prompt_rows(prompt_len)
+        need = scfg.request_pages(prompt_len, max_new)
+        self.reserved += need
+        self.slot_need[slot] = need
+        self.slot_rows[slot] = rows
+        self.ptab[slot] = 0
+        self._alloc(slot, -(-rows // scfg.page_size))
+        return rows
+
+    def prefill_args(self, slot: int) -> Tuple:
+        return (jnp.asarray(self.ptab[slot]),)
+
+    def wave_step(self) -> Optional[Callable]:
+        return None                 # paged always refills per slot
+
+    # --- page bookkeeping ---------------------------------------------
+
+    def _alloc(self, i: int, target: int) -> None:
+        """Grow slot ``i``'s page list to ``target`` pages: pop from the
+        free list, write the host table row, track the pool high-water
+        mark.  The admission reservation guarantees the free list can
+        serve every call."""
+        while len(self.slot_pages[i]) < target:
+            page = self.free_pages.pop()
+            self.ptab[i, len(self.slot_pages[i])] = page
+            self.slot_pages[i].append(page)
+        in_use = self.scfg.pool_pages - len(self.free_pages)
+        self.stats["peak_pages"] = max(self.stats["peak_pages"], in_use)
+
+    def _ensure(self, i: int) -> None:
+        """Cover the next decode chunk (allocation happens at chunk
+        boundaries, never mid-scan), capped at the slot's reservation.
+        ``chunk_tokens`` is the chunk's commit upper bound — under
+        speculation the drafted/verify rows *beyond* any commit need no
+        real page (their writes land in the null page and their reads
+        only cost acceptance, never correctness)."""
+        scfg = self.scfg
+        self._alloc(i, min(
+            -(-min(self.slot_rows[i] + scfg.chunk_tokens,
+                   scfg.max_len) // scfg.page_size),
+            self.slot_need[i]))
+
+    def _trim(self, i: int) -> None:
+        """Return pages allocated past slot ``i``'s committed rows (the
+        speculative chunk boundary: low acceptance leaves the lazy
+        chunk-cover allocation ahead of the commit point — hand those
+        pages back so waiting requests can admit; the next chunk's
+        ``_ensure`` re-covers)."""
+        target = max(-(-self.slot_rows[i] // self.scfg.page_size), 1)
+        while len(self.slot_pages[i]) > target:
+            page = self.slot_pages[i].pop()
+            self.ptab[i, len(self.slot_pages[i])] = 0
+            self.free_pages.append(page)
+
+    def _view_pages(self, live_rows: int) -> Optional[int]:
+        """Decode view bucket covering ``live_rows`` cache rows."""
+        scfg = self.scfg
+        if not scfg.page_view_chunk:
+            return None
+        vc = scfg.page_view_chunk
+        pages = -(-live_rows // scfg.page_size)
+        vp = -(-pages // vc) * vc
+        return min(vp, scfg.max_pages)
+
+    # --- chunk lifecycle ----------------------------------------------
+
+    def begin_chunk(self, live_slots: List[int]) -> Tuple[Callable, Tuple]:
+        # the attention view must cover every row the chunk can WRITE:
+        # commits (chunk_tokens) plus, under speculation, the verify
+        # block's uncommitted tail (spec_k rows) — otherwise a live
+        # slot's block write would clip into view-interior pages it
+        # still attends to
+        scfg = self.scfg
+        span = scfg.chunk_tokens + scfg.spec_k
+        live_rows = 0
+        for i in live_slots:
+            self._ensure(i)
+            live_rows = max(live_rows,
+                            min(self.slot_rows[i] + span, scfg.max_len))
+        loop = self._decode_loop(self._view_pages(live_rows))
+        return loop, (jnp.asarray(self.ptab),)
+
+    def note_commit(self, slot: int) -> None:
+        # pos advances at most once per emitted token
+        self.slot_rows[slot] += 1
+
+    def end_chunk(self, live_slots: List[int]) -> None:
+        if self.scfg.spec:
+            # chunk boundary: pages the chunk covered but the commits
+            # never reached go back to the pool
+            for i in live_slots:
+                self._trim(i)
+
+    def retire(self, slot: int) -> None:
+        """Return slot's pages to the pool and null its table row — the
+        next chunk's table refresh redirects the dead slot's residual
+        writes to the garbage page, so recycled pages can't be
+        corrupted."""
+        self.free_pages.extend(reversed(self.slot_pages[slot]))
+        self.slot_pages[slot] = []
+        self.reserved -= self.slot_need[slot]
+        self.slot_need[slot] = 0
+        self.slot_rows[slot] = 0
+        self.ptab[slot] = 0
+
+
+def make_backend(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                 abstract_params: Any, abstract_draft: Any,
+                 abstract_cache: Any, stats: Dict[str, Any]
+                 ) -> CacheBackend:
+    kind = PagedBackend if scfg.paged else MonoBackend
+    return kind(cfg, mesh, scfg, abstract_params, abstract_draft,
+                abstract_cache, stats)

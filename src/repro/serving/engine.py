@@ -1,1167 +1,168 @@
-"""Batched serving: chunked on-device decode + true continuous batching.
+"""Deprecated v1 serving surface — thin shims over the v2 package.
 
-Three jitted programs make up the hot path:
+The monolithic engine was split into ``serving/config.py`` (ServeConfig),
+``serving/state.py`` (requests, decode state, sampling),
+``serving/backends.py`` (mono/paged cache backends),
+``serving/loops.py`` (the jitted programs) and ``serving/api.py`` (the
+streaming :class:`~repro.serving.api.Engine`).  This module keeps the
+old import surface alive:
 
-  * ``build_prefill_slot_step`` — prefill ONE request (1, prompt_pad) into
-    slot ``i`` of the shared cache and stamp the slot's decode state
-    (first token, position, budget) on-device.  Refill never drains the
-    batch: other slots keep their cache rows and positions.
-  * ``build_decode_loop`` — the tentpole: a ``lax.scan`` that runs
-    ``decode_chunk`` decode+sample steps fully on-device.  The scan carry
-    holds the whole per-slot decode state — token, position, done mask,
-    remaining budget — plus the PRNG key; EOS, budget exhaustion and the
-    cache-capacity limit are all detected inside the scan.  The host sees
-    one ``(decode_chunk, slots)`` token block per call: **one
-    device→host sync per chunk**, not one per token.
-  * ``build_prefill_step`` / ``build_decode_step`` — the wave-style whole
-    -batch steps, kept for the dry-run's ``prefill_*`` / ``decode_*``
-    cells and as the 1-token reference the benchmarks compare against.
+  * :class:`Server` — delegates every call to an ``Engine``; same
+    greedy bit-exact outputs, same stats/plan attributes, same
+    ``submit() → uid`` / ``run() → finished`` contract.
+  * the old loop-builder names/signatures — wrappers over
+    ``serving.loops`` that pin the temperature arguments the v2
+    builders take (v2 threads a per-request temperature through).
+  * ``_device_fetch`` — still the single device→host transfer point:
+    the v2 engine resolves its fetch through THIS module's attribute,
+    so tests that monkeypatch ``engine._device_fetch`` keep counting
+    every sync.
 
-``Server`` schedules requests over fixed slots: free slots are refilled
-one at a time between chunks (per-slot prefill), every slot carries its
-own position counter, and ``init_cache`` is jitted once at build time.
-The dispatch layer is re-planned per phase — ``prefill_plan`` at both
-prefill geometries (``M = slots*prompt_pad`` for the wave path,
-``M = prompt_pad`` for per-slot refill) and ``decode_plan`` at
-``M = slots`` (one token per slot) — so kernel selection and autotuned
-block sizes match the geometry each phase actually runs.
-
-Sync contract: during decode the engine performs exactly
-``ceil(tokens_emitted / decode_chunk)`` device→host transfers per slot
-wave (all through :func:`_device_fetch`, which tests monkeypatch to
-count); per-slot prefill performs none — the first sampled token rides
-back in the next chunk's block.
-
-Paged KV cache (``ServeConfig.page_size > 0``): the cache becomes a
-shared page pool plus a per-slot page table (see ``models.attention``),
-with the ``build_paged_*`` twins of the jitted steps and a host-side
-allocator on ``Server`` — worst-case page *reservation* at admission
-(requests wait instead of OOMing when the pool is overcommitted), lazy
-physical allocation at prefill/chunk boundaries, page recycling and
-table nulling at retirement, per-request prompt buckets, and a decode
-attention view narrowed to the live slots' page bucket.  All of it is
-host arithmetic over already-fetched state: the sync contract above is
-unchanged under paging.
-
-Speculative decoding (``ServeConfig.spec_k > 0``): the decode loop is
-replaced by :func:`build_spec_decode_loop` — each scan step *drafts*
-``spec_k`` tokens per slot with the (typically sparse-packed) draft
-params at the slot's own positions, then runs ONE batched verify forward
-over the ``(slots, spec_k+1)`` block with the dense params
-(``models.decode_block``), accepts the matched prefix (greedy) or the
-residual-sampled prefix (temperature > 0), and commits only accepted
-tokens.  Rollback is per-slot ``cache_pos`` truncation — rejected rows
-are dead by masking (O(1); under paging the over-written pool rows sit
-in pages the slot already owns, and pages allocated ahead of the commit
-point are returned to the pool at the chunk boundary).  Draft and verify
-share ONE KV cache: the verify block re-writes the drafted rows with
-dense-model K/V, so the committed cache is always verify-model state;
-the hybrid family's recurrent SSM state (which masking cannot roll back)
-is snapshotted per block position and truncated to the accepted prefix
-(``models.select_recurrent``).  Greedy speculative output is therefore
-bit-identical to the non-speculative loop *regardless of the draft* —
-the draft only moves the acceptance rate, i.e. the tok/s.  One host
-sync per chunk still holds: a chunk now carries up to
-``decode_chunk * (spec_k + 1)`` tokens plus the drafted/accepted
-counters in the same fetch.
-
-Sampling: greedy or temperature; fully deterministic given the seed.
-The speculative path derives every draw via ``jax.random.fold_in`` keyed
-on (chunk, step, slot, draft position), so the number of tokens a slot
-accepts can never shift another slot's — or another position's — stream.
+New code should use :class:`repro.serving.Engine` directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import itertools
-import time
-from typing import Any, Callable, Dict, List, Optional
+import warnings
+from typing import Any, Callable, List, Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro import models as MZ
-from repro.distributed import sharding as SH
-from repro.kernels import dispatch
 from repro.models.config import ModelConfig
+from repro.serving import loops
+from repro.serving.api import Engine
+from repro.serving.config import ServeConfig
+from repro.serving.loops import (_state_shardings, build_decode_step,
+                                 build_prefill_step,
+                                 build_spec_decode_loop)
+from repro.serving.state import (Request, _device_fetch, _fresh_stats,
+                                 _slot_keys, _slot_uniform,
+                                 init_decode_state, sample_token,
+                                 sample_token_folded)
 
-Array = jax.Array
-
-
-@dataclasses.dataclass(frozen=True)
-class ServeConfig:
-    slots: int = 8                  # concurrent sequences (batch)
-    max_len: int = 1024             # cache capacity (logical, per slot)
-    prompt_pad: int = 128           # prompts are padded to this length
-    max_new_tokens: int = 64
-    decode_chunk: int = 16          # on-device decode steps per host sync
-    temperature: float = 0.0        # 0 → greedy
-    eos_token: int = 1
-    kv_mode: str = "auto"           # sharding of the KV cache
-    seed: int = 0
-    # --- paged KV cache (page_size > 0 switches the cache layout) ---
-    page_size: int = 0              # KV rows per page; 0 → monolithic
-    num_pages: int = 0              # allocatable pool pages; 0 → capacity
-    page_view_chunk: int = 8        # decode view granularity in pages;
-    #                                 0 → always attend the full table
-    #                                 (bit-identical to monolithic)
-    prompt_buckets: int = 0         # >0: pad each prompt to a multiple of
-    #                                 this (≤ prompt_pad) instead of the
-    #                                 uniform prompt_pad — short prompts
-    #                                 then occupy only their own pages
-    # --- speculative decoding (spec_k > 0 switches the decode loop) ---
-    spec_k: int = 0                 # tokens drafted per verify; 0 → off
-    spec_draft: str = "self"        # draft params when none are passed:
-    #                                 "self" → the verify params (greedy
-    #                                 acceptance ≈ 1; the amortization
-    #                                 baseline), "pack" → the verify
-    #                                 params packed into the model
-    #                                 config's sparse formats (the
-    #                                 sparse-draft/dense-verify split)
-
-    @property
-    def paged(self) -> bool:
-        return self.page_size > 0
-
-    @property
-    def spec(self) -> bool:
-        return self.spec_k > 0
-
-    @property
-    def chunk_tokens(self) -> int:
-        """Upper bound on tokens a slot can emit per decode chunk — the
-        host-block height.  ``decode_chunk`` counts *scan steps*: plain
-        decode emits one token per step, speculation up to ``spec_k + 1``
-        (the carry token plus the accepted drafts)."""
-        return self.decode_chunk * (self.spec_k + 1)
-
-    @property
-    def max_pages(self) -> int:
-        return -(-self.max_len // max(self.page_size, 1))
-
-    @property
-    def pool_pages(self) -> int:
-        """Allocatable pages (excluding the reserved null page)."""
-        if self.num_pages > 0:
-            return self.num_pages
-        return self.slots * self.max_pages
-
-    def prompt_rows(self, prompt_len: int) -> int:
-        """Cache rows a prompt occupies: the uniform ``prompt_pad``, or
-        the request's own bucket when ``prompt_buckets`` is set."""
-        if not self.prompt_buckets:
-            return self.prompt_pad
-        b = self.prompt_buckets
-        return min(self.prompt_pad, -(-max(prompt_len, 1) // b) * b)
-
-    def request_pages(self, prompt_len: int, max_new: int) -> int:
-        """Worst-case pages a request can touch (its admission
-        reservation): positions stay < prompt_rows + max_new (the budget
-        freezes the slot) and < max_len (capacity freezes it).  The
-        single source of the admission math — benchmarks size their
-        demand-fitted pools through this too."""
-        rows = min(self.prompt_rows(prompt_len) + max_new, self.max_len)
-        return -(-rows // self.page_size)
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray              # (L,) int32
-    max_new: int
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-def sample_token(logits: Array, key: Array, temperature: float) -> Array:
-    """(B, V) → (B,) int32."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(
-        key, logits / temperature, axis=-1).astype(jnp.int32)
-
-
-def _slot_keys(key: Array, n: int) -> Array:
-    """(n,) independent keys via per-slot ``fold_in``."""
-    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
-
-
-def sample_token_folded(logits: Array, key: Array,
-                        temperature: float) -> Array:
-    """(B, V) → (B,) with a per-slot ``fold_in`` key discipline.
-
-    The speculative path samples at many (step, slot, draft-position)
-    sites whose *consumption* depends on data (how many drafts a slot
-    accepts).  A split-per-call stream would let one slot's acceptance
-    shift every later draw; folding the key per slot (callers fold per
-    step and draft position first) pins each draw to its coordinates, so
-    the same seed yields the same tokens with and without speculation at
-    temperature 0 — and a reproducible stream at temperature > 0.
-    """
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    keys = _slot_keys(key, logits.shape[0])
-    return jax.vmap(
-        lambda k, l: jax.random.categorical(k, l / temperature)
-    )(keys, logits).astype(jnp.int32)
-
-
-def _slot_uniform(key: Array, n: int) -> Array:
-    """(n,) uniforms, one per slot, via the same fold discipline."""
-    keys = _slot_keys(key, n)
-    return jax.vmap(lambda k: jax.random.uniform(k))(keys)
-
-
-def _device_fetch(tree: Any) -> Any:
-    """The engine's single device→host transfer point.
-
-    Every token/state readback in ``Server.run`` goes through here, so
-    tests can monkeypatch it to count syncs and assert the
-    one-sync-per-chunk contract.
-    """
-    return jax.device_get(tree)
-
-
-# ---------------------------------------------------------------------------
-# Jitted steps
-# ---------------------------------------------------------------------------
-
-def build_prefill_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
-                       abstract_params: Any, abstract_cache: Any,
-                       batch_shapes: Dict[str, Any]) -> Callable:
-    """(params, batch, cache) → (last_logits, cache).
-
-    Whole-batch wave prefill — what the dry-run's ``prefill_*`` cells
-    lower.  ``Server`` itself prefills per slot (see
-    ``build_prefill_slot_step``).
-    """
-    pspecs = SH.param_specs(abstract_params, cfg, mesh)
-    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
-    bspecs = SH.batch_specs(batch_shapes, mesh)
-
-    def step(params, batch, cache):
-        return MZ.prefill(params, cfg, batch, cache)
-
-    return jax.jit(
-        step,
-        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, bspecs),
-                      SH.named(mesh, cspecs)),
-        out_shardings=(None, SH.named(mesh, cspecs)),
-        donate_argnums=(2,))
-
-
-def build_decode_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
-                      abstract_params: Any, abstract_cache: Any) -> Callable:
-    """(params, token (B,), cache, pos () or (B,)) → (logits, cache).
-
-    One decode step; the per-token loop the benchmarks use as the seed
-    reference.  ``pos`` may be per-slot (vector) — the model layer
-    handles both.
-    """
-    pspecs = SH.param_specs(abstract_params, cfg, mesh)
-    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
-
-    def step(params, token, cache, pos):
-        return MZ.decode_step(params, cfg, token, cache, pos)
-
-    return jax.jit(
-        step,
-        in_shardings=(SH.named(mesh, pspecs), None,
-                      SH.named(mesh, cspecs), None),
-        out_shardings=(None, SH.named(mesh, cspecs)),
-        donate_argnums=(2,))
+__all__ = [
+    "Engine", "Request", "ServeConfig", "Server", "_device_fetch",
+    "_fresh_stats", "_slot_keys", "_slot_uniform", "_state_shardings",
+    "build_decode_loop", "build_decode_step", "build_paged_decode_loop",
+    "build_paged_prefill_slot_step", "build_prefill_slot_step",
+    "build_prefill_step", "build_prefill_wave_step",
+    "build_spec_decode_loop", "init_decode_state", "sample_token",
+    "sample_token_folded",
+]
 
 
 def build_prefill_slot_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
                             abstract_params: Any, abstract_cache: Any
                             ) -> Callable:
-    """(params, tokens (1, P), cache, state, slot, budget, key)
-    → (cache, state).
-
-    Prefills one request into a fresh batch-1 scratch cache, merges it
-    into slot ``slot`` of the shared cache, samples the first token from
-    the prompt logits and stamps the slot's decode state — all on-device
-    (the first token is emitted by the next decode chunk, so refill
-    costs zero host syncs).  ``slot`` is a traced scalar: one compile
-    serves every slot.
-    """
-    pspecs = SH.param_specs(abstract_params, cfg, mesh)
-    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
-    bspecs = SH.batch_specs(
-        {"tokens": jax.ShapeDtypeStruct((1, scfg.prompt_pad), jnp.int32)},
-        mesh)
+    """v1 signature: (params, tokens, cache, state, slot, budget, key)
+    → (cache, state); temperature pinned to ``scfg.temperature``."""
+    inner = loops.build_prefill_slot_step(
+        cfg, mesh, scfg, abstract_params, abstract_cache)
+    temp = jnp.asarray(scfg.temperature, jnp.float32)
 
     def step(params, batch, cache, state, slot, budget, key):
-        scratch = MZ.blank_slot_cache(cache)
-        logits, scratch = MZ.prefill(params, cfg, batch, scratch)
-        cache = MZ.merge_cache_slot(cache, scratch, slot)
-        first = sample_token(logits[:, :cfg.vocab_size], key,
-                             scfg.temperature)[0]
-        state = {
-            "tok": state["tok"].at[slot].set(first),
-            "pos": state["pos"].at[slot].set(scfg.prompt_pad),
-            "done": state["done"].at[slot].set(False),
-            "left": state["left"].at[slot].set(budget),
-        }
-        return cache, state
-
-    sspecs = _state_shardings(mesh)
-    return jax.jit(
-        step,
-        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, bspecs),
-                      SH.named(mesh, cspecs), sspecs, None, None, None),
-        out_shardings=(SH.named(mesh, cspecs), sspecs),
-        donate_argnums=(2, 3))
-
-
-def build_prefill_wave_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
-                            abstract_params: Any, abstract_cache: Any
-                            ) -> Callable:
-    """(params, tokens (slots, P), cache, valid, budgets, key)
-    → (cache, state).
-
-    The cold-start / wave-boundary fast path: when EVERY slot is free the
-    whole batch prefills in one call (per-slot prefill would pay ``slots``
-    jit dispatches for the same rows) and the decode state is rebuilt
-    wholesale — ``valid`` masks slots that actually received a request.
-    Never used while any slot is live: whole-batch prefill rewrites every
-    slot's cache rows.
-    """
-    pspecs = SH.param_specs(abstract_params, cfg, mesh)
-    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
-    bspecs = SH.batch_specs(
-        {"tokens": jax.ShapeDtypeStruct((scfg.slots, scfg.prompt_pad),
-                                        jnp.int32)}, mesh)
-    sspecs = _state_shardings(mesh)
-
-    def step(params, batch, cache, valid, budgets, key):
-        logits, cache = MZ.prefill(params, cfg, batch, cache)
-        first = sample_token(logits[:, :cfg.vocab_size], key,
-                             scfg.temperature)
-        state = {
-            "tok": jnp.where(valid, first, 0),
-            "pos": jnp.where(valid, scfg.prompt_pad, 0).astype(jnp.int32),
-            "done": ~valid,
-            "left": jnp.where(valid, budgets, 0),
-        }
-        return cache, state
-
-    return jax.jit(
-        step,
-        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, bspecs),
-                      SH.named(mesh, cspecs), None, None, None),
-        out_shardings=(SH.named(mesh, cspecs), sspecs),
-        donate_argnums=(2,))
-
-
-def _fresh_stats() -> Dict[str, Any]:
-    return {"chunk_s": [], "chunk_tokens": [], "prefills": 0,
-            "peak_pages": 0, "admission_waits": 0,
-            "drafted": 0, "accepted": 0}
-
-
-def init_decode_state(slots: int) -> Dict[str, Array]:
-    """All-free decode state: every slot done, no budget, pos 0."""
-    return {
-        "tok": jnp.zeros((slots,), jnp.int32),
-        "pos": jnp.zeros((slots,), jnp.int32),
-        "done": jnp.ones((slots,), bool),
-        "left": jnp.zeros((slots,), jnp.int32),
-    }
-
-
-def _state_shardings(mesh: Mesh) -> Dict[str, NamedSharding]:
-    """Replicated shardings for the per-slot decode state.
-
-    Explicit (not ``None``/unspecified) so the first call — whose state
-    comes fresh off the host — and every later call — whose state is a
-    committed device output — hit the SAME compiled executable instead
-    of forking a second variant mid-serve."""
-    return {k: NamedSharding(mesh, P())
-            for k in ("tok", "pos", "done", "left")}
-
-
-def build_decode_loop(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
-                      abstract_params: Any, abstract_cache: Any) -> Callable:
-    """(params, cache, state, key) → (cache, state, tokens, emitted).
-
-    Runs ``scfg.decode_chunk`` decode+sample steps on-device in one
-    ``lax.scan``.  Each step first *emits* the carry token (the one
-    sampled last step — or by the slot's prefill), then decides whether
-    the slot is finished (EOS, budget, or cache capacity) and, if not,
-    decodes+samples the next token at the slot's own position.  Finished
-    and free slots ride along masked: their state is frozen and their
-    (idempotent) cache writes land on rows nothing attends to.
-
-    Returns the new cache/state plus ``tokens``/``emitted`` blocks of
-    shape ``(decode_chunk, slots)`` — the single host transfer per chunk.
-    """
-    pspecs = SH.param_specs(abstract_params, cfg, mesh)
-    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
-    V = cfg.vocab_size
-
-    def loop(params, cache, state, key):
-        def body(carry, _):
-            cache, st, key = carry
-            tok, pos = st["tok"], st["pos"]
-            done, left = st["done"], st["left"]
-            emit = (~done) & (left > 0)
-            left = left - emit.astype(left.dtype)
-            # the slot is finished once the emitted token is EOS, the
-            # budget is spent, or the cache can't hold another row
-            done = done | (emit & ((tok == scfg.eos_token) | (left == 0)
-                                   | (pos + 1 >= scfg.max_len)))
-            logits, cache = MZ.decode_step(params, cfg, tok, cache, pos)
-            key, sk = jax.random.split(key)
-            nxt = sample_token(logits[:, :V], sk, scfg.temperature)
-            alive = ~done
-            st = {"tok": jnp.where(alive, nxt, tok),
-                  "pos": jnp.where(alive, pos + 1, pos),
-                  "done": done, "left": left}
-            return (cache, st, key), (tok, emit)
-
-        (cache, state, _), (tokens, emitted) = jax.lax.scan(
-            body, (cache, state, key), None, length=scfg.decode_chunk)
-        return cache, state, tokens, emitted
-
-    sspecs = _state_shardings(mesh)
-    return jax.jit(
-        loop,
-        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, cspecs),
-                      sspecs, None),
-        out_shardings=(SH.named(mesh, cspecs), sspecs, None, None),
-        donate_argnums=(1, 2))
+        return inner(params, batch, cache, state, slot, budget, temp, key)
+    return step
 
 
 def build_paged_prefill_slot_step(cfg: ModelConfig, mesh: Mesh,
                                   scfg: ServeConfig, abstract_params: Any,
                                   abstract_cache: Any, prompt_rows: int
                                   ) -> Callable:
-    """(params, tokens (1, prompt_rows), cache, state, slot, budget, key,
-    page_row (max_pages,)) → (cache, state).
-
-    The paged twin of :func:`build_prefill_slot_step`: the scratch cache
-    *shares* the page pool (``blank_slot_cache``) and gets the slot's
-    host-assigned pages stamped into its table, so prefill scatters the
-    prompt straight into pages no live slot owns; the merge then only
-    writes the slot's page-table row.  ``prompt_rows`` is static — with
-    ``prompt_buckets`` enabled the server compiles one step per bucket
-    and short prompts stop paying full-``prompt_pad`` prefill work.
-    """
-    pspecs = SH.param_specs(abstract_params, cfg, mesh)
-    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
-    bspecs = SH.batch_specs(
-        {"tokens": jax.ShapeDtypeStruct((1, prompt_rows), jnp.int32)}, mesh)
+    """v1 signature: (params, tokens, cache, state, slot, budget, key,
+    page_row) → (cache, state)."""
+    inner = loops.build_prefill_slot_step(
+        cfg, mesh, scfg, abstract_params, abstract_cache,
+        prompt_rows=prompt_rows, paged=True)
+    temp = jnp.asarray(scfg.temperature, jnp.float32)
 
     def step(params, batch, cache, state, slot, budget, key, page_row):
-        scratch = MZ.blank_slot_cache(cache)
-        scratch = MZ.set_page_table(scratch, page_row[None])
-        logits, scratch = MZ.prefill(params, cfg, batch, scratch)
-        cache = MZ.merge_cache_slot(cache, scratch, slot)
-        first = sample_token(logits[:, :cfg.vocab_size], key,
-                             scfg.temperature)[0]
-        state = {
-            "tok": state["tok"].at[slot].set(first),
-            "pos": state["pos"].at[slot].set(prompt_rows),
-            "done": state["done"].at[slot].set(False),
-            "left": state["left"].at[slot].set(budget),
-        }
-        return cache, state
+        return inner(params, batch, cache, state, slot, budget, temp, key,
+                     page_row)
+    return step
 
-    sspecs = _state_shardings(mesh)
-    return jax.jit(
-        step,
-        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, bspecs),
-                      SH.named(mesh, cspecs), sspecs, None, None, None,
-                      None),
-        out_shardings=(SH.named(mesh, cspecs), sspecs),
-        donate_argnums=(2, 3))
+
+def build_prefill_wave_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                            abstract_params: Any, abstract_cache: Any
+                            ) -> Callable:
+    """v1 signature: (params, tokens, cache, valid, budgets, key)
+    → (cache, state)."""
+    inner = loops.build_prefill_wave_step(
+        cfg, mesh, scfg, abstract_params, abstract_cache)
+    temps = jnp.full((scfg.slots,), scfg.temperature, jnp.float32)
+
+    def step(params, batch, cache, valid, budgets, key):
+        return inner(params, batch, cache, valid, budgets, temps, key)
+    return step
+
+
+def build_decode_loop(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                      abstract_params: Any, abstract_cache: Any) -> Callable:
+    """v1 signature: (params, cache, state, key)
+    → (cache, state, tokens, emitted)."""
+    inner = loops.build_decode_loop(
+        cfg, mesh, scfg, abstract_params, abstract_cache)
+    temps = jnp.full((scfg.slots,), scfg.temperature, jnp.float32)
+
+    def loop(params, cache, state, key):
+        return inner(params, cache, state, temps, key)
+    return loop
 
 
 def build_paged_decode_loop(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
                             abstract_params: Any, abstract_cache: Any,
                             view_pages: Optional[int] = None) -> Callable:
-    """(params, cache, state, key, ptab (slots, max_pages))
-    → (cache, state, tokens, emitted).
-
-    The paged twin of :func:`build_decode_loop`.  The host-authoritative
-    page table rides in as an argument (host→device only — the
-    one-device-fetch-per-chunk contract is untouched) and is stamped into
-    the cache before the scan, so page allocations and slot retirements
-    made between chunks take effect here.  ``view_pages`` (static)
-    narrows the attention gather to the first N logical pages — the host
-    picks the smallest bucket covering every live slot, so decode
-    attention work tracks actual sequence lengths.  Writes from frozen
-    (done/free) slots whose position lies beyond the view clip into the
-    slot's page-table tail, which retirement has nulled — they land in
-    the garbage page.
-    """
-    pspecs = SH.param_specs(abstract_params, cfg, mesh)
-    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
-    V = cfg.vocab_size
+    """v1 signature: (params, cache, state, key, ptab)
+    → (cache, state, tokens, emitted)."""
+    inner = loops.build_decode_loop(
+        cfg, mesh, scfg, abstract_params, abstract_cache,
+        paged=True, view_pages=view_pages)
+    temps = jnp.full((scfg.slots,), scfg.temperature, jnp.float32)
 
     def loop(params, cache, state, key, ptab):
-        cache = MZ.set_page_table(cache, ptab)
+        return inner(params, cache, state, temps, key, ptab)
+    return loop
 
-        def body(carry, _):
-            cache, st, key = carry
-            tok, pos = st["tok"], st["pos"]
-            done, left = st["done"], st["left"]
-            emit = (~done) & (left > 0)
-            left = left - emit.astype(left.dtype)
-            done = done | (emit & ((tok == scfg.eos_token) | (left == 0)
-                                   | (pos + 1 >= scfg.max_len)))
-            vcache = MZ.page_view(cache, view_pages)
-            logits, vcache = MZ.decode_step(params, cfg, tok, vcache, pos)
-            cache = MZ.unpage_view(vcache, cache)
-            key, sk = jax.random.split(key)
-            nxt = sample_token(logits[:, :V], sk, scfg.temperature)
-            alive = ~done
-            st = {"tok": jnp.where(alive, nxt, tok),
-                  "pos": jnp.where(alive, pos + 1, pos),
-                  "done": done, "left": left}
-            return (cache, st, key), (tok, emit)
-
-        (cache, state, _), (tokens, emitted) = jax.lax.scan(
-            body, (cache, state, key), None, length=scfg.decode_chunk)
-        return cache, state, tokens, emitted
-
-    sspecs = _state_shardings(mesh)
-    return jax.jit(
-        loop,
-        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, cspecs),
-                      sspecs, None, None),
-        out_shardings=(SH.named(mesh, cspecs), sspecs, None, None),
-        donate_argnums=(1, 2))
-
-
-def build_spec_decode_loop(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
-                           abstract_params: Any, abstract_draft: Any,
-                           abstract_cache: Any, paged: bool = False,
-                           view_pages: Optional[int] = None) -> Callable:
-    """(params, draft_params, cache, state, key[, ptab])
-    → (cache, state, tokens, emitted, drafted, accepted).
-
-    The speculative twin of :func:`build_decode_loop` /
-    :func:`build_paged_decode_loop`: each of the ``decode_chunk`` scan
-    steps
-
-      1. emits the carry token (sampled by the previous step / prefill),
-      2. *drafts* ``spec_k`` tokens per slot with ``draft_params`` — an
-         inner scan of single-token decode steps at the slot's own
-         positions, exactly the sparse decode geometry (``M = slots``),
-      3. runs ONE batched verify forward over the ``(slots, spec_k+1)``
-         block with the dense ``params`` (``models.decode_block``,
-         ``M = slots*(spec_k+1)``), which also re-writes the block's KV
-         rows with verify-model values,
-      4. accepts per slot the longest draft prefix the verify agrees
-         with (greedy: token match; temperature: residual rejection
-         sampling) and commits it — ``cache_pos`` advances by the
-         emitted count, rejected rows are dead by masking, and the
-         hybrid family's recurrent state is truncated to the accepted
-         prefix via the per-position snapshots.
-
-    The host block is ``(decode_chunk * (spec_k+1), slots)`` — still one
-    device→host transfer per chunk, now also carrying the drafted /
-    accepted totals for the acceptance-rate stats.  A slot freezes when
-    fewer than ``spec_k + 1`` cache rows remain (the block write must
-    stay in bounds), so full parity with the plain loop needs
-    ``max_len ≥ prompt_rows + max_new + spec_k``.
-    """
-    pspecs = SH.param_specs(abstract_params, cfg, mesh)
-    dspecs = SH.param_specs(abstract_draft, cfg, mesh)
-    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
-    V = cfg.vocab_size
-    K = scfg.spec_k
-    T = scfg.temperature
-
-    def spec_step(params, dparams, cache, st, skey):
-        """One draft+verify+commit step; ``cache`` is the (possibly
-        view-narrowed) cache the models run against."""
-        tok, pos = st["tok"], st["pos"]
-        done, left = st["done"], st["left"]
-        # emit the carry token (same contract as the plain loop), but
-        # freeze while the whole drafted block still fits below max_len
-        emit0 = (~done) & (left > 0)
-        left = left - emit0
-        done = done | (emit0 & ((tok == scfg.eos_token) | (left == 0)
-                                | (pos + 1 + K >= scfg.max_len)))
-        alive = ~done
-
-        rec0 = MZ.recurrent_state(cache)
-
-        def draft_body(c, i):
-            dcache, dtok = c
-            lg, dcache = MZ.decode_step(dparams, cfg, dtok, dcache, pos + i)
-            lg = lg[:, :V]
-            nxt = sample_token_folded(lg, jax.random.fold_in(skey, i), T)
-            return (dcache, nxt), (nxt, lg)
-
-        (dcache, _), (drafts, dlogits) = jax.lax.scan(
-            draft_body, (cache, tok), jnp.arange(K))
-        # drafts (K, B): d_1..d_K; dlogits (K, B, V): the dists they came
-        # from.  The draft advanced any recurrent state — restore it, the
-        # verify block consumes d_0..d_K itself (KV rows are re-written
-        # by the verify's own scatter, so they need no restore).
-        dcache = MZ.set_recurrent_state(dcache, rec0)
-        block = jnp.concatenate([tok[None], drafts], 0).T    # (B, K+1)
-        vlg, cache, snaps = MZ.decode_block(
-            params, cfg, block, dcache, pos,
-            collect_states=rec0 is not None)
-        vlg = vlg[:, :, :V]
-        dT = drafts.T                                        # (B, K)
-
-        if T <= 0.0:
-            # greedy: accept drafts while they equal the verify argmax;
-            # the first mismatch position supplies the correction token,
-            # full acceptance supplies the bonus token — either way the
-            # carry is g[j]
-            g = jnp.argmax(vlg, axis=-1).astype(jnp.int32)   # (B, K+1)
-            acc = jnp.cumprod((dT == g[:, :K]).astype(jnp.int32), axis=1)
-            j = acc.sum(axis=1)                              # (B,)
-            carry_tok = jnp.take_along_axis(g, j[:, None], 1)[:, 0]
-        else:
-            # residual (rejection) sampling — the lossless acceptance
-            # rule: accept d_i with prob min(1, p_verify/p_draft); on
-            # the first rejection resample from max(p_v - p_d, 0); on
-            # full acceptance the residual degenerates to p_verify at
-            # the bonus position.
-            pv = jax.nn.softmax(vlg / T, axis=-1)            # (B, K+1, V)
-            pd = jax.nn.softmax(dlogits / T, axis=-1)        # (K, B, V)
-            pd = pd.transpose(1, 0, 2)                       # (B, K, V)
-            pv_t = jnp.take_along_axis(pv[:, :K], dT[..., None],
-                                       axis=-1)[..., 0]      # (B, K)
-            pd_t = jnp.take_along_axis(pd, dT[..., None],
-                                       axis=-1)[..., 0]
-            u = jnp.stack([
-                _slot_uniform(jax.random.fold_in(skey, K + 1 + i),
-                              dT.shape[0]) for i in range(K)], axis=1)
-            accept = u * pd_t <= pv_t                        # (B, K)
-            acc = jnp.cumprod(accept.astype(jnp.int32), axis=1)
-            j = acc.sum(axis=1)
-            pv_j = jnp.take_along_axis(
-                pv, j[:, None, None], axis=1)[:, 0]          # (B, V)
-            pd_pad = jnp.concatenate(
-                [pd, jnp.zeros_like(pd[:, :1])], axis=1)     # (B, K+1, V)
-            pd_j = jnp.take_along_axis(
-                pd_pad, j[:, None, None], axis=1)[:, 0]
-            res = jnp.maximum(pv_j - pd_j, 0.0)
-            res_sum = res.sum(-1, keepdims=True)
-            res = jnp.where(res_sum > 0, res / res_sum, pv_j)
-            res_logits = jnp.where(res > 0, jnp.log(res), -1e30)
-            carry_tok = sample_token_folded(
-                res_logits, jax.random.fold_in(skey, 2 * K + 2), 1.0)
-
-        # commit-and-emit the accepted drafts: budget and EOS can cut
-        # the accepted prefix short exactly like the plain loop would
-        accb = acc.astype(bool)
-        eos_hit = accb & (dT == scfg.eos_token)
-        eos_before = (jnp.cumsum(eos_hit.astype(jnp.int32), axis=1)
-                      - eos_hit.astype(jnp.int32)) > 0
-        in_budget = jnp.arange(K)[None, :] < left[:, None]
-        emit_d = alive[:, None] & accb & in_budget & ~eos_before
-        n_emit = emit_d.sum(axis=1).astype(left.dtype)
-        left = left - n_emit
-        done = done | (alive & ((emit_d & eos_hit).any(axis=1)
-                                | (left == 0)))
-        pos = jnp.where(alive, pos + 1 + n_emit, pos)
-        tok = jnp.where(~done, carry_tok, tok)
-
-        if snaps is not None:
-            # recurrent state can't roll back by masking: truncate it to
-            # the accepted prefix (state after d_0..d_{n_emit}); frozen
-            # slots keep their pre-block state
-            sel = MZ.select_recurrent(snaps, n_emit.astype(jnp.int32))
-            cache = MZ.set_recurrent_state(
-                cache, MZ.where_slot(alive, sel, rec0))
-
-        st = {"tok": tok, "pos": pos, "done": done, "left": left}
-        # column 0 is the carry token (block[:, 0]), columns 1..K the
-        # drafted candidates — the emit mask says which ones landed
-        step_tokens = jnp.concatenate([block[:, :1], dT], axis=1)
-        step_emits = jnp.concatenate([emit0[:, None], emit_d], axis=1)
-        drafted = jnp.where(alive, K, 0).sum()
-        accepted = jnp.where(alive, j, 0).sum()
-        return cache, st, step_tokens, step_emits, drafted, accepted
-
-    def scan_chunk(params, dparams, cache, state, key):
-        def body(carry, step):
-            cache, st, key = carry
-            skey = jax.random.fold_in(key, step)
-            if paged:
-                vcache = MZ.page_view(cache, view_pages)
-                vcache, st, toks, emits, dr, ac = spec_step(
-                    params, dparams, vcache, st, skey)
-                cache = MZ.unpage_view(vcache, cache)
-            else:
-                cache, st, toks, emits, dr, ac = spec_step(
-                    params, dparams, cache, st, skey)
-            return (cache, st, key), (toks, emits, dr, ac)
-
-        (cache, state, _), (toks, emits, dr, ac) = jax.lax.scan(
-            body, (cache, state, key), jnp.arange(scfg.decode_chunk))
-        # (steps, B, K+1) → time-major (steps*(K+1), B): the same block
-        # layout the plain loop hands the host, just taller
-        tokens = toks.transpose(0, 2, 1).reshape(-1, toks.shape[1])
-        emitted = emits.transpose(0, 2, 1).reshape(-1, emits.shape[1])
-        return cache, state, tokens, emitted, dr.sum(), ac.sum()
-
-    sspecs = _state_shardings(mesh)
-    if paged:
-        def loop(params, dparams, cache, state, key, ptab):
-            cache = MZ.set_page_table(cache, ptab)
-            return scan_chunk(params, dparams, cache, state, key)
-
-        return jax.jit(
-            loop,
-            in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, dspecs),
-                          SH.named(mesh, cspecs), sspecs, None, None),
-            out_shardings=(SH.named(mesh, cspecs), sspecs, None, None,
-                           None, None),
-            donate_argnums=(2, 3))
-
-    return jax.jit(
-        scan_chunk,
-        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, dspecs),
-                      SH.named(mesh, cspecs), sspecs, None),
-        out_shardings=(SH.named(mesh, cspecs), sspecs, None, None,
-                       None, None),
-        donate_argnums=(2, 3))
-
-
-# ---------------------------------------------------------------------------
-# Scheduler
-# ---------------------------------------------------------------------------
 
 class Server:
-    """Slot-based continuous batching on one mesh.
+    """Deprecated batch-style front end: ``submit()`` then ``run()``.
 
-    Every slot carries its own position counter, done mask and token
-    budget — all device-resident between host syncs.  Finished slots are
-    refilled at the next chunk boundary by a per-slot prefill that
-    writes only that slot's cache rows; in-flight slots never stall.
-
-    ``stats`` records per-chunk wall time and emitted-token counts (the
-    serving benchmark derives per-token latency percentiles from them);
-    ``sync_count`` counts device→host transfers (the one-per-chunk
-    contract).
+    Every call delegates to a v2 :class:`~repro.serving.api.Engine`;
+    greedy outputs are bit-identical to the pre-split Server.  Prefer
+    ``Engine`` — it additionally streams tokens, admits mid-run and
+    cancels.
     """
 
     def __init__(self, cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
                  params: Any, draft_params: Any = None):
-        self.cfg, self.mesh, self.scfg = cfg, mesh, scfg
-        self.params = params
-        self.queue: List[Request] = []
-        self.finished: List[Request] = []
-        self._uid = itertools.count()
-        self._key = jax.random.key(scfg.seed)
-        self.sync_count = 0
-        self.stats: Dict[str, Any] = _fresh_stats()
+        warnings.warn(
+            "repro.serving.Server is deprecated; use repro.serving.Engine "
+            "(submit()/step()/run() with streaming handles)",
+            DeprecationWarning, stacklevel=2)
+        self.engine = Engine(cfg, mesh, scfg, params,
+                             draft_params=draft_params)
 
-        if scfg.spec:
-            if scfg.prompt_pad + scfg.spec_k + 1 > scfg.max_len:
-                raise ValueError(
-                    f"spec_k={scfg.spec_k} needs max_len ≥ prompt_pad + "
-                    f"spec_k + 1 (= {scfg.prompt_pad + scfg.spec_k + 1}) "
-                    "so the first drafted block fits the cache")
-            if draft_params is None:
-                if scfg.spec_draft == "pack":
-                    from repro.core.sparse_linear import make_draft_params
-                    draft_params = make_draft_params(params, cfg)
-                elif scfg.spec_draft == "self":
-                    draft_params = params
-                else:
-                    raise ValueError(
-                        f"unknown spec_draft {scfg.spec_draft!r} "
-                        "(expected 'self' or 'pack')")
-        self.draft_params = draft_params
-
-        abstract_params = jax.eval_shape(lambda: params)
-        # kernel/mode/blocks resolved per packed weight at each phase's
-        # real geometry (apply_linear flattens leading dims into M):
-        # wave prefill runs M = slots*prompt_pad, per-slot refill
-        # M = prompt_pad (entries carry their M), decode one token per
-        # slot (M = slots) — the dispatch layer re-plans per decode
-        # batch size instead of assuming prefill M.
-        self.prefill_plan = (
-            dispatch.plan_params(params, M=scfg.slots * scfg.prompt_pad)
-            + dispatch.plan_params(params, M=scfg.prompt_pad))
-        self.decode_plan = dispatch.plan_params(params, M=scfg.slots)
-        self.dispatch_plan = self.prefill_plan          # back-compat alias
-        # speculative phases get their own geometry rows: the draft
-        # re-plans the (usually sparse-packed) draft weights at the
-        # decode geometry, the verify plans the dense weights at
-        # M = slots*(spec_k+1) — its own autotune keys (entries carry M)
-        self.draft_plan: List[dict] = []
-        self.verify_plan: List[dict] = []
-        if scfg.spec:
-            self.draft_plan = dispatch.plan_params(self.draft_params,
-                                                   M=scfg.slots)
-            self.verify_plan = dispatch.plan_params(
-                params, M=scfg.slots * (scfg.spec_k + 1))
-            # a speculative decode chunk runs both phases — its plan
-            # carries the draft rows (the sparse kernels doing the
-            # per-token work) and the verify-shaped rows
-            self.decode_plan = (self.decode_plan + self.draft_plan
-                                + self.verify_plan)
-        self._abstract_cache = jax.eval_shape(
-            lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len,
-                                  page_size=scfg.page_size,
-                                  num_pages=scfg.pool_pages))
-        cspecs = SH.cache_specs(self._abstract_cache, cfg, mesh,
-                                kv_mode=scfg.kv_mode)
-        # hoisted: jitted once here, not per wave inside the serve loop
-        self._init_cache = jax.jit(
-            lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len,
-                                  page_size=scfg.page_size,
-                                  num_pages=scfg.pool_pages),
-            out_shardings=SH.named(mesh, cspecs))
-        self._abstract_params = abstract_params
-        self._abstract_draft = (jax.eval_shape(lambda: self.draft_params)
-                                if scfg.spec else None)
-        if scfg.paged:
-            # both plans additionally carry the paged-attention decision
-            # (its own page-shaped dispatch/autotune key)
-            pa = dispatch.plan_paged_attention(
-                cfg, batch=scfg.slots, page_size=scfg.page_size,
-                max_pages=scfg.max_pages)
-            self.prefill_plan = self.prefill_plan + [pa]
-            self.decode_plan = self.decode_plan + [pa]
-            if scfg.spec:
-                # the verify scores spec_k+1 queries per slot — its
-                # paged-attention row is keyed at the block geometry
-                pav = dispatch.plan_paged_attention(
-                    cfg, batch=scfg.slots * (scfg.spec_k + 1),
-                    page_size=scfg.page_size, max_pages=scfg.max_pages)
-                self.verify_plan = self.verify_plan + [pav]
-                self.decode_plan = self.decode_plan + [pav]
-            # compiled paged steps are keyed by static geometry: prefill
-            # by prompt_rows bucket, decode by view-pages bucket
-            self._paged_prefill_steps: Dict[int, Callable] = {}
-            self._paged_decode_loops: Dict[Optional[int], Callable] = {}
-            self._free_pages: List[int] = list(range(scfg.pool_pages, 0, -1))
-            self._reserved = 0
-            self._slot_pages: List[List[int]] = [[] for _ in
-                                                 range(scfg.slots)]
-            self._slot_need = [0] * scfg.slots
-            self._slot_rows = [0] * scfg.slots
-            self._ptab = np.zeros((scfg.slots, scfg.max_pages), np.int32)
-        else:
-            self._prefill_slot = build_prefill_slot_step(
-                cfg, mesh, scfg, abstract_params, self._abstract_cache)
-            self._prefill_wave = build_prefill_wave_step(
-                cfg, mesh, scfg, abstract_params, self._abstract_cache)
-            if scfg.spec:
-                self._decode_loop = build_spec_decode_loop(
-                    cfg, mesh, scfg, abstract_params, self._abstract_draft,
-                    self._abstract_cache)
-            else:
-                self._decode_loop = build_decode_loop(
-                    cfg, mesh, scfg, abstract_params, self._abstract_cache)
-
-    def reset_stats(self) -> None:
-        """Zero the serving counters — including the speculative
-        drafted/accepted tallies behind :meth:`acceptance_rate` —
-        (benchmarks call this after their compile warm-up pass)."""
-        self.sync_count = 0
-        self.stats = _fresh_stats()
-
-    def acceptance_rate(self) -> float:
-        """Accepted / drafted tokens since the last ``reset_stats`` (1.0
-        for a draft the verifier never corrects; 0.0 with speculation
-        off or before any chunk ran)."""
-        return self.stats["accepted"] / max(self.stats["drafted"], 1)
-
-    def cache_bytes(self) -> int:
-        """Allocated KV/state cache footprint in bytes (the buffers
-        ``init_cache`` materializes — pool + tables for paged, the full
-        ``slots × max_len`` block for monolithic)."""
-        return sum(int(np.prod(l.shape)) * l.dtype.itemsize
-                   for l in jax.tree.leaves(self._abstract_cache))
-
-    def submit(self, prompt: np.ndarray,
-               max_new: Optional[int] = None) -> int:
-        req = Request(uid=next(self._uid),
-                      prompt=np.asarray(prompt, np.int32),
-                      max_new=max_new or self.scfg.max_new_tokens)
-        if self.scfg.paged:
-            need = self.scfg.request_pages(len(req.prompt), req.max_new)
-            if need > self.scfg.pool_pages:
-                raise ValueError(
-                    f"request needs {need} pages but the pool only has "
-                    f"{self.scfg.pool_pages} — raise num_pages")
-        self.queue.append(req)
-        return req.uid
-
-    def _pad_prompt(self, r: Request, rows: Optional[int] = None
-                    ) -> np.ndarray:
-        width = rows or self.scfg.prompt_pad
-        tokens = np.zeros((1, width), np.int32)
-        L = min(len(r.prompt), width)
-        tokens[0, width - L:] = r.prompt[-L:]                  # left-pad
-        return tokens
-
-    # --- paged bookkeeping (host side) -----------------------------------
-
-    def _alloc_pages(self, i: int, target: int) -> None:
-        """Grow slot ``i``'s page list to ``target`` pages: pop from the
-        free list, write the host table row, track the pool high-water
-        mark.  The admission reservation guarantees the free list can
-        serve every call."""
-        while len(self._slot_pages[i]) < target:
-            page = self._free_pages.pop()
-            self._ptab[i, len(self._slot_pages[i])] = page
-            self._slot_pages[i].append(page)
-        in_use = self.scfg.pool_pages - len(self._free_pages)
-        self.stats["peak_pages"] = max(self.stats["peak_pages"], in_use)
-
-    def _ensure_pages(self, i: int) -> None:
-        """Cover the next decode chunk (allocation happens at chunk
-        boundaries, never mid-scan), capped at the slot's reservation.
-        ``chunk_tokens`` is the chunk's commit upper bound — under
-        speculation the drafted/verify rows *beyond* any commit need no
-        real page (their writes land in the null page and their reads
-        only cost acceptance, never correctness)."""
-        scfg = self.scfg
-        self._alloc_pages(i, min(
-            -(-min(self._slot_rows[i] + scfg.chunk_tokens,
-                   scfg.max_len) // scfg.page_size),
-            self._slot_need[i]))
-
-    def _trim_pages(self, i: int) -> None:
-        """Return pages allocated past slot ``i``'s committed rows (the
-        speculative chunk boundary: low acceptance leaves the lazy
-        chunk-cover allocation ahead of the commit point — hand those
-        pages back so waiting requests can admit; the next chunk's
-        ``_ensure_pages`` re-covers)."""
-        target = max(-(-self._slot_rows[i] // self.scfg.page_size), 1)
-        while len(self._slot_pages[i]) > target:
-            page = self._slot_pages[i].pop()
-            self._ptab[i, len(self._slot_pages[i])] = 0
-            self._free_pages.append(page)
-
-    def _retire_slot(self, i: int) -> None:
-        """Return slot ``i``'s pages to the pool and null its table row —
-        the next chunk's table refresh redirects the dead slot's residual
-        writes to the garbage page, so recycled pages can't be
-        corrupted."""
-        self._free_pages.extend(reversed(self._slot_pages[i]))
-        self._slot_pages[i] = []
-        self._reserved -= self._slot_need[i]
-        self._slot_need[i] = 0
-        self._slot_rows[i] = 0
-        self._ptab[i] = 0
-
-    def _paged_prefill_step(self, rows: int) -> Callable:
-        fn = self._paged_prefill_steps.get(rows)
-        if fn is None:
-            fn = build_paged_prefill_slot_step(
-                self.cfg, self.mesh, self.scfg, self._abstract_params,
-                self._abstract_cache, rows)
-            self._paged_prefill_steps[rows] = fn
-        return fn
-
-    def _paged_decode_loop(self, view: Optional[int]) -> Callable:
-        fn = self._paged_decode_loops.get(view)
-        if fn is None:
-            if self.scfg.spec:
-                fn = build_spec_decode_loop(
-                    self.cfg, self.mesh, self.scfg, self._abstract_params,
-                    self._abstract_draft, self._abstract_cache,
-                    paged=True, view_pages=view)
-            else:
-                fn = build_paged_decode_loop(
-                    self.cfg, self.mesh, self.scfg, self._abstract_params,
-                    self._abstract_cache, view_pages=view)
-            self._paged_decode_loops[view] = fn
-        return fn
-
-    def _view_pages(self, live_rows: int) -> Optional[int]:
-        """Decode view bucket covering ``live_rows`` cache rows."""
-        scfg = self.scfg
-        if not scfg.page_view_chunk:
-            return None
-        vc = scfg.page_view_chunk
-        pages = -(-live_rows // scfg.page_size)
-        vp = -(-pages // vc) * vc
-        return min(vp, scfg.max_pages)
-
-    def _collect_chunk(self, blk, emit, done, slot_req, dt) -> None:
-        """Distribute one fetched ``(decode_chunk, slots)`` token block,
-        record the chunk stats, and retire finished slots — the shared
-        post-fetch half of both serve loops.  In paged mode emitted
-        tokens advance the slot's position upper bound and retirement
-        returns the slot's pages."""
-        scfg = self.scfg
-        n_emitted = 0
-        for t in range(blk.shape[0]):       # chunk_tokens rows under spec
-            for i in range(scfg.slots):
-                if emit[t, i] and slot_req[i] is not None:
-                    slot_req[i].out.append(int(blk[t, i]))
-                    n_emitted += 1
-                    if scfg.paged:
-                        # pos advances at most once per emitted token
-                        self._slot_rows[i] += 1
-        self.stats["chunk_s"].append(dt)
-        self.stats["chunk_tokens"].append(n_emitted)
-        for i in range(scfg.slots):
-            if slot_req[i] is not None and done[i]:
-                slot_req[i].done = True
-                self.finished.append(slot_req[i])
-                slot_req[i] = None
-                if scfg.paged:
-                    self._retire_slot(i)
-
-    def _run_chunk(self, loop: Callable, cache, state, key, *extra):
-        """Invoke one decode chunk and make the single device→host fetch
-        — shared by the plain and speculative paths (the speculative
-        loop's drafted/accepted counters ride in the same transfer)."""
-        if self.scfg.spec:
-            cache, state, tokens, emitted, dr, ac = loop(
-                self.params, self.draft_params, cache, state, key, *extra)
-            blk, emit, done, dr, ac = _device_fetch(
-                (tokens, emitted, state["done"], dr, ac))
-            self.stats["drafted"] += int(dr)
-            self.stats["accepted"] += int(ac)
-        else:
-            cache, state, tokens, emitted = loop(
-                self.params, cache, state, key, *extra)
-            blk, emit, done = _device_fetch(
-                (tokens, emitted, state["done"]))
-        self.sync_count += 1
-        return cache, state, blk, emit, done
+    def submit(self, prompt, max_new: Optional[int] = None) -> int:
+        return self.engine.submit(prompt, max_new=max_new).uid
 
     def run(self) -> List[Request]:
-        """Serve until the queue drains; returns finished requests."""
-        if self.scfg.paged:
-            return self._run_paged()
-        scfg = self.scfg
-        slot_req: List[Optional[Request]] = [None] * scfg.slots
-        with self.mesh:
-            cache = self._init_cache()
-            state = init_decode_state(scfg.slots)
-            while self.queue or any(slot_req):
-                if not any(slot_req) and self.queue:
-                    # cold start / wave boundary: every slot is free —
-                    # one batched prefill instead of `slots` dispatches
-                    take = self.queue[:scfg.slots]
-                    self.queue = self.queue[scfg.slots:]
-                    prompts = np.zeros((scfg.slots, scfg.prompt_pad),
-                                       np.int32)
-                    budgets = np.zeros(scfg.slots, np.int32)
-                    valid = np.zeros(scfg.slots, bool)
-                    for i, r in enumerate(take):
-                        prompts[i] = self._pad_prompt(r)[0]
-                        budgets[i] = r.max_new
-                        valid[i] = True
-                        slot_req[i] = r
-                    self._key, sk = jax.random.split(self._key)
-                    cache, state = self._prefill_wave(
-                        self.params, {"tokens": jnp.asarray(prompts)},
-                        cache, jnp.asarray(valid), jnp.asarray(budgets), sk)
-                    self.stats["prefills"] += len(take)
-                else:
-                    # continuous refill: per-slot prefill into the shared
-                    # cache; live slots keep decoding from their positions
-                    for i in range(scfg.slots):
-                        if slot_req[i] is not None or not self.queue:
-                            continue
-                        r = self.queue.pop(0)
-                        self._key, sk = jax.random.split(self._key)
-                        cache, state = self._prefill_slot(
-                            self.params, {"tokens": jnp.asarray(
-                                self._pad_prompt(r))},
-                            cache, state, jnp.asarray(i, jnp.int32),
-                            jnp.asarray(r.max_new, jnp.int32), sk)
-                        slot_req[i] = r
-                        self.stats["prefills"] += 1
-                if not any(slot_req):
-                    break
-                # one chunk: decode_chunk steps on-device, one sync back
-                self._key, sk = jax.random.split(self._key)
-                t0 = time.perf_counter()
-                cache, state, blk, emit, done = self._run_chunk(
-                    self._decode_loop, cache, state, sk)
-                dt = time.perf_counter() - t0
-                self._collect_chunk(blk, emit, done, slot_req, dt)
-        return self.finished
+        return self.engine.run()
 
-    def _run_paged(self) -> List[Request]:
-        """The paged serve loop.
+    # --- paged-allocator introspection (tests poke these) -------------
 
-        Same skeleton as the monolithic path — admit into free slots,
-        run one decode chunk, fetch one token block — plus the host side
-        of paging: FIFO admission gated on a worst-case page
-        *reservation* (a request is only admitted when the pool can
-        cover it to completion, so live slots can never starve
-        mid-decode), physical pages handed out lazily at prefill and at
-        chunk boundaries (``_ensure_pages``), pages returned and the
-        table row nulled at retirement, and the decode view narrowed to
-        the live slots' bucket.  Everything here is host arithmetic on
-        already-fetched state: the sync contract stays one
-        ``_device_fetch`` per chunk, and refills stay sync-free.
-        """
-        scfg = self.scfg
-        slot_req: List[Optional[Request]] = [None] * scfg.slots
-        with self.mesh:
-            cache = self._init_cache()
-            state = init_decode_state(scfg.slots)
-            while self.queue or any(slot_req):
-                for i in range(scfg.slots):
-                    if slot_req[i] is not None or not self.queue:
-                        continue
-                    r = self.queue[0]
-                    rows = scfg.prompt_rows(len(r.prompt))
-                    need = scfg.request_pages(len(r.prompt), r.max_new)
-                    if self._reserved + need > scfg.pool_pages:
-                        # head-of-line blocking keeps FIFO fairness: the
-                        # next retirement frees this request's pages
-                        self.stats["admission_waits"] += 1
-                        break
-                    self.queue.pop(0)
-                    self._reserved += need
-                    self._slot_need[i] = need
-                    self._slot_rows[i] = rows
-                    self._ptab[i] = 0
-                    self._alloc_pages(i, -(-rows // scfg.page_size))
-                    self._key, sk = jax.random.split(self._key)
-                    cache, state = self._paged_prefill_step(rows)(
-                        self.params,
-                        {"tokens": jnp.asarray(self._pad_prompt(r, rows))},
-                        cache, state, jnp.asarray(i, jnp.int32),
-                        jnp.asarray(r.max_new, jnp.int32), sk,
-                        jnp.asarray(self._ptab[i]))
-                    slot_req[i] = r
-                    self.stats["prefills"] += 1
-                if not any(slot_req):
-                    break
-                # the attention view must cover every row the chunk can
-                # WRITE: commits (chunk_tokens) plus, under speculation,
-                # the verify block's uncommitted tail (spec_k rows) —
-                # otherwise a live slot's block write would clip into
-                # view-interior pages it still attends to
-                span = scfg.chunk_tokens + scfg.spec_k
-                live_rows = 0
-                for i in range(scfg.slots):
-                    if slot_req[i] is not None:
-                        self._ensure_pages(i)
-                        live_rows = max(live_rows,
-                                        min(self._slot_rows[i] + span,
-                                            scfg.max_len))
-                loop = self._paged_decode_loop(self._view_pages(live_rows))
-                self._key, sk = jax.random.split(self._key)
-                t0 = time.perf_counter()
-                cache, state, blk, emit, done = self._run_chunk(
-                    loop, cache, state, sk, jnp.asarray(self._ptab))
-                dt = time.perf_counter() - t0
-                self._collect_chunk(blk, emit, done, slot_req, dt)
-                if scfg.spec:
-                    # chunk boundary: pages the chunk covered but the
-                    # commits never reached go back to the pool
-                    for i in range(scfg.slots):
-                        if slot_req[i] is not None:
-                            self._trim_pages(i)
-        return self.finished
+    @property
+    def _free_pages(self) -> List[int]:
+        return self.engine._backend.free_pages
+
+    @property
+    def _ptab(self):
+        return self.engine._backend.ptab
+
+    def __getattr__(self, name: str):
+        # everything else (scfg, stats, sync_count, plans, queue,
+        # finished, reset_stats, acceptance_rate, cache_bytes, …) is the
+        # engine's
+        if name == "engine":
+            raise AttributeError(name)
+        return getattr(self.engine, name)

@@ -1,0 +1,147 @@
+"""Per-request and per-slot serving state, sampling, and the engine's
+single device→host fetch point.
+
+``Request`` is the host-side record of one submission (id, arrival
+time, TTFT, output tokens, cancel flag); the *device*-side decode state
+is the 4-array dict built by :func:`init_decode_state` that the jitted
+loops carry between chunks.  Sampling helpers live here too because the
+prefill steps and the decode loops share them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"               # submitted, not yet in a slot
+    RUNNING = "running"             # prefilled into a slot, decoding
+    DONE = "done"                   # finished (EOS / budget / capacity)
+    CANCELLED = "cancelled"         # cancel() took effect
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (L,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    # --- request-level API v2 fields -----------------------------------
+    status: RequestStatus = RequestStatus.QUEUED
+    temperature: Optional[float] = None   # None → ServeConfig.temperature
+    stream: bool = False
+    cancel_requested: bool = False
+    slot: Optional[int] = None            # slot while RUNNING
+    arrival_s: float = dataclasses.field(default_factory=time.perf_counter)
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time-to-first-token in seconds (queue wait + prefill + the
+        first chunk), or ``None`` before any token arrived."""
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One emitted token, as returned by ``Engine.step()``."""
+    uid: int
+    token: int
+    index: int                      # position in the request's output
+    final: bool                     # last token of this request
+
+
+def _fresh_stats() -> Dict[str, Any]:
+    return {"chunk_s": [], "chunk_tokens": [], "prefills": 0,
+            "peak_pages": 0, "admission_waits": 0,
+            "drafted": 0, "accepted": 0}
+
+
+def init_decode_state(slots: int) -> Dict[str, Array]:
+    """All-free decode state: every slot done, no budget, pos 0."""
+    return {
+        "tok": jnp.zeros((slots,), jnp.int32),
+        "pos": jnp.zeros((slots,), jnp.int32),
+        "done": jnp.ones((slots,), bool),
+        "left": jnp.zeros((slots,), jnp.int32),
+    }
+
+
+def sample_token(logits: Array, key: Array, temperature: float) -> Array:
+    """(B, V) → (B,) int32 at one static temperature (0 → greedy)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def _slot_keys(key: Array, n: int) -> Array:
+    """(n,) independent keys via per-slot ``fold_in``."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+
+
+def sample_token_folded(logits: Array, key: Array,
+                        temperature: float) -> Array:
+    """(B, V) → (B,) with a per-slot ``fold_in`` key discipline.
+
+    The speculative path samples at many (step, slot, draft-position)
+    sites whose *consumption* depends on data (how many drafts a slot
+    accepts).  A split-per-call stream would let one slot's acceptance
+    shift every later draw; folding the key per slot (callers fold per
+    step and draft position first) pins each draw to its coordinates, so
+    the same seed yields the same tokens with and without speculation at
+    temperature 0 — and a reproducible stream at temperature > 0.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    keys = _slot_keys(key, logits.shape[0])
+    return jax.vmap(
+        lambda k, l: jax.random.categorical(k, l / temperature)
+    )(keys, logits).astype(jnp.int32)
+
+
+def sample_token_slots(logits: Array, key: Array, temps: Array) -> Array:
+    """(B, V) → (B,) with a *per-slot* temperature vector ``temps``.
+
+    Slots with ``temps[i] <= 0`` take the argmax (greedy — bit-identical
+    to :func:`sample_token` at temperature 0), the rest draw from their
+    own tempered distribution under the per-slot ``fold_in`` discipline,
+    so a batch can mix greedy and sampled requests without either
+    perturbing the other's stream.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    keys = _slot_keys(key, logits.shape[0])
+    safe = jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(
+        lambda k, l: jax.random.categorical(k, l)
+    )(keys, logits / safe).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+def _slot_uniform(key: Array, n: int) -> Array:
+    """(n,) uniforms, one per slot, via the same fold discipline."""
+    keys = _slot_keys(key, n)
+    return jax.vmap(lambda k: jax.random.uniform(k))(keys)
+
+
+def _device_fetch(tree: Any) -> Any:
+    """The engine's single device→host transfer point.
+
+    Every token/state readback goes through here (resolved through the
+    deprecated ``repro.serving.engine`` module so existing tests that
+    monkeypatch ``engine._device_fetch`` still intercept every sync).
+    """
+    return jax.device_get(tree)

@@ -57,6 +57,54 @@ class TestOneSidedRows:
         assert regressions == []
 
 
+class TestTtftMetric:
+    """The serving section gates ttft_p95_ms (lower is better) alongside
+    tok_per_s — with the same one-sided tolerance per metric."""
+
+    def test_new_metric_on_old_row_does_not_block(self):
+        """A baseline recorded before TTFT existed must not block the
+        first run that records it."""
+        base = record(serving_rows=[srow("dense", 8, 100.0)])
+        cur = record(serving_rows=[
+            {"config": "dense", "slots": 8, "tok_per_s": 99.0,
+             "ttft_p95_ms": 12.0}])
+        lines, regressions = compare(base, cur, 0.30)
+        assert regressions == []
+        assert any("new metric" in ln for ln in lines)
+
+    def test_ttft_regression_blocks(self):
+        base = record(serving_rows=[
+            {"config": "dense", "slots": 8, "tok_per_s": 100.0,
+             "ttft_p95_ms": 10.0}])
+        cur = record(serving_rows=[
+            {"config": "dense", "slots": 8, "tok_per_s": 100.0,
+             "ttft_p95_ms": 20.0}])
+        lines, regressions = compare(base, cur, 0.30)
+        assert len(regressions) == 1
+        assert regressions[0][2] == "ttft_p95_ms"
+
+    def test_ttft_improvement_passes(self):
+        base = record(serving_rows=[
+            {"config": "dense", "slots": 8, "tok_per_s": 100.0,
+             "ttft_p95_ms": 20.0}])
+        cur = record(serving_rows=[
+            {"config": "dense", "slots": 8, "tok_per_s": 100.0,
+             "ttft_p95_ms": 5.0}])
+        _, regressions = compare(base, cur, 0.30)
+        assert regressions == []
+
+    def test_ttft_p50_not_gated(self):
+        """Only the p95 is gated; p50 rides along informationally."""
+        base = record(serving_rows=[
+            {"config": "dense", "slots": 8, "tok_per_s": 100.0,
+             "ttft_p50_ms": 1.0, "ttft_p95_ms": 10.0}])
+        cur = record(serving_rows=[
+            {"config": "dense", "slots": 8, "tok_per_s": 100.0,
+             "ttft_p50_ms": 50.0, "ttft_p95_ms": 10.0}])
+        _, regressions = compare(base, cur, 0.30)
+        assert regressions == []
+
+
 class TestGateStillBites:
     def test_regression_detected(self):
         base = record(serving_rows=[srow("dense", 8, 100.0)])

@@ -1,0 +1,46 @@
+"""Module-size gate: fail when any ``.py`` file under the given
+directories exceeds the line budget.
+
+  python tools/check_module_size.py --limit 700 src/repro/serving
+
+Keeps the serving-package split honest (ruff has no file-length rule,
+so CI runs this beside ``ruff check`` in the lint job; the tier-1 suite
+mirrors it in ``tests/test_engine.py``).  Stdlib-only on purpose.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+", help="directories to scan")
+    ap.add_argument("--limit", type=int, default=700)
+    args = ap.parse_args(argv)
+
+    over = []
+    for root in args.paths:
+        for dirpath, _, names in os.walk(root):
+            for name in sorted(names):
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, name)
+                with open(path) as f:
+                    n = sum(1 for _ in f)
+                status = "over" if n > args.limit else "ok"
+                print(f"  {path}: {n} lines ({status}, limit {args.limit})")
+                if n > args.limit:
+                    over.append((path, n))
+    if over:
+        print(f"{len(over)} module(s) over the {args.limit}-line budget",
+              file=sys.stderr)
+        return 1
+    print("all modules within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
