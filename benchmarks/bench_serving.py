@@ -46,6 +46,19 @@ drafted token is cheaper than a dense one, i.e. on bandwidth-bound
 accelerators running the packed kernels), the pack row shows what a
 real sparse draft's acceptance does to it.
 
+The **shared-system-prompt scenario** (``shared-sys-{64,256}`` rows)
+serves 8 slots of equal-length prompts that share a pinned head —
+``engine.register_prefix(head)`` then ``submit(suffix, prefix=handle)``
+— against an unshared paged engine serving the identical full prompts.
+Sharing maps the head's resident pages into every slot's page table and
+prefill computes only the suffix rows, so the row reports
+``ttft_speedup`` (unshared/shared TTFT p50) and ``kv_ratio``
+(unshared/shared peak allocated page bytes) — PR 6's acceptance gate
+reads both ≥ 1.5 — plus the engine's own ``prefix_hits`` /
+``shared_pages`` counters.  Retention is capped (``prefix_cache_pages=1``)
+and warm-up suffixes are disjoint from the timed ones, so the timed run
+measures pinned-head sharing only.
+
 Shapes shrink under ``REPRO_BENCH_SMOKE=1`` (the CI smoke step) so one
 pass stays in seconds.
 """
@@ -138,40 +151,48 @@ SPEC_KS = (2, 4) if SMOKE else (2, 4, 8)
 
 
 def _serve_chunked(cfg, mesh, params, slots, requests, scfg=None,
-                   warm_all=False, max_new=None):
+                   warm_all=False, max_new=None, prefix_tokens=None,
+                   warm_requests=None, rounds=1):
     scfg = scfg or ServeConfig(
         slots=slots, max_len=MAX_LEN, prompt_pad=PROMPT_PAD,
         max_new_tokens=MAX_NEW, decode_chunk=DECODE_CHUNK,
         temperature=0.0, eos_token=-1)
     server = Engine(cfg, mesh, scfg, params)
+    handle = (server.register_prefix(prefix_tokens)
+              if prefix_tokens is not None else None)
     if warm_all:
         # heterogeneous mix: visit every prompt bucket / view bucket so
         # the timed run pays zero compiles
-        for p in requests:
-            server.submit(p, max_new=max_new)
+        for p in (warm_requests if warm_requests is not None else requests):
+            server.submit(p, max_new=max_new, prefix=handle)
     else:
         server.submit(requests[0][: scfg.prompt_pad],
                       max_new=scfg.decode_chunk + 1)
     server.run()                                    # compile warm-up
     server.finished.clear()
     server.reset_stats()
-    for p in requests:
-        server.submit(p, max_new=max_new)
+    # rounds > 1 drains between equal-sized submit batches: every batch
+    # is a fresh single wave, so TTFT percentiles average over rounds
+    # instead of mixing queue-wait into the tail
+    per_round = -(-len(requests) // rounds)
     t0 = time.perf_counter()
-    done = server.run()
+    done = []
+    for i in range(rounds):
+        for p in requests[i * per_round:(i + 1) * per_round]:
+            server.submit(p, max_new=max_new, prefix=handle)
+        done.extend(server.run())
     wall = time.perf_counter() - t0
+    stats = server.stats()                          # typed EngineStats
     toks = sum(len(r.out) for r in done)
     per_tok_ms = np.concatenate([
         np.full(n, s / n * 1e3)
-        for s, n in zip(server.stats["chunk_s"],
-                        server.stats["chunk_tokens"]) if n]) \
-        if server.stats["chunk_tokens"] else np.zeros(1)
+        for s, n in zip(stats.chunk_s, stats.chunk_tokens) if n]) \
+        if stats.chunk_tokens else np.zeros(1)
     page_bytes_used = 0
     if scfg.paged:
-        leaf_bytes = server.cache_bytes()
         # per-page bytes across layers ≈ pool bytes / (pool+null pages)
         page_bytes_used = int(
-            leaf_bytes * server.stats["peak_pages"] / (scfg.pool_pages + 1))
+            stats.cache_bytes * stats.peak_pages / (scfg.pool_pages + 1))
     ttft_ms = np.asarray([r.ttft_s for r in done
                           if r.ttft_s is not None]) * 1e3
     if ttft_ms.size == 0:
@@ -181,11 +202,14 @@ def _serve_chunked(cfg, mesh, params, slots, requests, scfg=None,
             "p95_ms": float(np.percentile(per_tok_ms, 95)),
             "ttft_p50_ms": float(np.percentile(ttft_ms, 50)),
             "ttft_p95_ms": float(np.percentile(ttft_ms, 95)),
-            "syncs": server.sync_count, "wall_s": wall,
-            "kv_bytes": server.cache_bytes(),
+            "syncs": stats.sync_count, "wall_s": wall,
+            "kv_bytes": stats.cache_bytes,
             "peak_used_bytes": page_bytes_used,
-            "admission_waits": server.stats["admission_waits"],
-            "acceptance_rate": server.acceptance_rate()}
+            "admission_waits": stats.admission_waits,
+            "acceptance_rate": stats.acceptance_rate,
+            "prefix_hits": stats.prefix_hits,
+            "shared_pages": stats.shared_pages,
+            "cow_copies": stats.cow_copies}
 
 
 def _serve_per_token(cfg, mesh, params, slots, requests):
@@ -280,6 +304,90 @@ def _het_scenario(mesh) -> list:
     ]
 
 
+# --- shared-system-prompt scenario (prefix cache over paged) ---------------
+# 8 slots of equal-total-length prompts led by a pinned shared head
+# (``register_prefix``) vs the unshared paged engine serving the same
+# full prompts.  Every suffix opens with a token unique across the whole
+# bench so the only sharing is the pinned head — no accidental partial
+# matches, and compile keys are identical between warm-up and timed run.
+SH_SLOTS = 8
+SH_HEADS = (64, 256)                # shared head lengths (pages: 4 / 16)
+SH_SUFFIX = 16                      # per-request distinct tail
+SH_MAX_NEW = 8 if SMOKE else 32
+SH_CHUNK = 2                        # short chunks: TTFT ≈ prefill cost
+SH_ROUNDS = 2 if SMOKE else 4       # single-wave rounds averaged into
+SH_REQS = SH_SLOTS * SH_ROUNDS      # the TTFT percentiles (no queue
+                                    # wait — each round drains first)
+
+
+def _shared_scenario(mesh) -> list:
+    """Prefix-shared vs unshared paged serving of a shared-system-prompt
+    workload: same physical page pool, same prompts, same budgets.  Runs
+    a larger model than the grid so prefill compute (what sharing
+    eliminates) dominates per-call dispatch overhead."""
+    import dataclasses
+    cfg = ModelConfig(name="bench-shared", n_layers=4, d_model=256,
+                      vocab_size=VOCAB, n_heads=4, n_kv_heads=2,
+                      d_ff=512, remat=False)
+    params = MZ.init_model(jax.random.key(0), cfg)
+    rng = np.random.default_rng(2)
+    rows = []
+    for head_len in SH_HEADS:
+        head = rng.integers(1, VOCAB, size=head_len).astype(np.int32)
+
+        def suffixes(tag0, n):
+            out = []
+            for i in range(n):
+                s = rng.integers(1, VOCAB, size=SH_SUFFIX).astype(np.int32)
+                s[0] = tag0 + i             # unique first token → no
+                out.append(s)               # cross-request tail sharing
+            return out
+        warm = suffixes(1, SH_SLOTS)
+        timed = suffixes(1 + SH_SLOTS, SH_REQS)
+        total = head_len + SH_SUFFIX
+        base = ServeConfig(
+            slots=SH_SLOTS, max_len=total + 2 * SH_MAX_NEW,
+            prompt_pad=total, max_new_tokens=SH_MAX_NEW,
+            decode_chunk=SH_CHUNK, temperature=0.0, eos_token=-1,
+            page_size=HET_PAGE, page_view_chunk=8)
+        pool = SH_SLOTS * base.request_pages(total, SH_MAX_NEW)
+        un_scfg = dataclasses.replace(base, num_pages=pool)
+        sh_scfg = dataclasses.replace(un_scfg, prefix_cache=True,
+                                      prefix_cache_pages=1)
+        un = _serve_chunked(
+            cfg, mesh, params, SH_SLOTS,
+            [np.concatenate([head, s]) for s in timed], scfg=un_scfg,
+            warm_all=True, max_new=SH_MAX_NEW, rounds=SH_ROUNDS,
+            warm_requests=[np.concatenate([head, s]) for s in warm])
+        sh = _serve_chunked(
+            cfg, mesh, params, SH_SLOTS, timed, scfg=sh_scfg,
+            warm_all=True, max_new=SH_MAX_NEW, prefix_tokens=head,
+            warm_requests=warm, rounds=SH_ROUNDS)
+        mb = 1.0 / (1024 * 1024)
+        rows.append({
+            "config": f"shared-sys-{head_len}", "slots": SH_SLOTS,
+            "tokens": sh["tokens"],
+            "tok_per_s": round(sh["tok_per_s"], 1),
+            "p50_ms": round(sh["p50_ms"], 3),
+            "p95_ms": round(sh["p95_ms"], 3),
+            "ttft_p50_ms": round(sh["ttft_p50_ms"], 3),
+            "ttft_p95_ms": round(sh["ttft_p95_ms"], 3),
+            "syncs": sh["syncs"],
+            "prefix_hits": sh["prefix_hits"],
+            "shared_pages": sh["shared_pages"],
+            "cow_copies": sh["cow_copies"],
+            "kv_alloc_mb": round(sh["peak_used_bytes"] * mb, 3),
+            "base_tok_per_s": round(un["tok_per_s"], 1),
+            "base_ttft_p50_ms": round(un["ttft_p50_ms"], 3),
+            "base_kv_alloc_mb": round(un["peak_used_bytes"] * mb, 3),
+            "ttft_speedup": round(un["ttft_p50_ms"]
+                                  / max(sh["ttft_p50_ms"], 1e-9), 2),
+            "kv_ratio": round(un["peak_used_bytes"]
+                              / max(sh["peak_used_bytes"], 1), 2),
+            "admission_waits": sh["admission_waits"]})
+    return rows
+
+
 def _spec_scenario(mesh, paged_tok_per_s: float) -> list:
     """Speculative serving of the heterogeneous mix vs the paged
     baseline: ``spec-k{K}`` rows self-draft (acceptance ≈ 1 — the
@@ -355,11 +463,15 @@ def run() -> dict:
     paged_tps = next(r["tok_per_s"] for r in het_rows
                      if r["config"] == "het-paged")
     rows.extend(_spec_scenario(mesh, paged_tps))
+    rows.extend(_shared_scenario(mesh))
     return {"rows": rows, "decode_chunk": DECODE_CHUNK, "max_new": MAX_NEW,
             "het": {"lens": HET_LENS, "page_size": HET_PAGE,
                     "max_len": HET_MAX_LEN, "pool_pages": _het_pool_pages(),
                     "max_new": HET_MAX_NEW},
             "spec_ks": list(SPEC_KS),
+            "shared": {"heads": list(SH_HEADS), "suffix": SH_SUFFIX,
+                       "requests": SH_REQS, "max_new": SH_MAX_NEW,
+                       "page_size": HET_PAGE},
             "backend": jax.default_backend()}
 
 
@@ -372,7 +484,7 @@ def main(out=None) -> None:
     print("config,slots,tokens,tok_per_s,p50_ms,p95_ms,ttft_p50_ms,"
           "ttft_p95_ms,syncs,ref_tok_per_s,speedup")
     for r in out["rows"]:
-        if r["config"].startswith(("het-", "spec-")):
+        if r["config"].startswith(("het-", "spec-", "shared-")):
             continue
         print(f"{r['config']},{r['slots']},{r['tokens']},"
               f"{r['tok_per_s']},{r['p50_ms']},{r['p95_ms']},"
@@ -396,6 +508,26 @@ def main(out=None) -> None:
                   f"{r['syncs']},{r['kv_mb']},{r.get('peak_used_mb', '')},"
                   f"{r.get('kv_ratio', '')},{r.get('speedup_vs_mono', '')},"
                   f"{r.get('admission_waits', '')}")
+    shared = [r for r in out["rows"] if r["config"].startswith("shared-")]
+    if shared:
+        sh = out.get("shared", {})
+        print(f"# shared-system-prompt serving on {SH_SLOTS} slots — "
+              f"pinned head (register_prefix) + {sh.get('suffix')}-token "
+              f"distinct tails, vs the unshared paged engine "
+              f"(page_size={sh.get('page_size')})")
+        print("config,slots,tokens,tok_per_s,ttft_p50_ms,ttft_p95_ms,"
+              "syncs,prefix_hits,shared_pages,cow_copies,kv_alloc_mb,"
+              "base_tok_per_s,base_ttft_p50_ms,base_kv_alloc_mb,"
+              "ttft_speedup,kv_ratio,admission_waits")
+        for r in shared:
+            print(f"{r['config']},{r['slots']},{r['tokens']},"
+                  f"{r['tok_per_s']},{r['ttft_p50_ms']},"
+                  f"{r['ttft_p95_ms']},{r['syncs']},{r['prefix_hits']},"
+                  f"{r['shared_pages']},{r['cow_copies']},"
+                  f"{r['kv_alloc_mb']},{r['base_tok_per_s']},"
+                  f"{r['base_ttft_p50_ms']},{r['base_kv_alloc_mb']},"
+                  f"{r['ttft_speedup']},{r['kv_ratio']},"
+                  f"{r['admission_waits']}")
     spec = [r for r in out["rows"] if r["config"].startswith("spec-")]
     if spec:
         print(f"# speculative serving on the heterogeneous mix — "

@@ -43,6 +43,14 @@ def main() -> int:
     ap.add_argument("--prompt-buckets", type=int, default=0,
                     help="paged only: pad each prompt to a multiple of "
                          "this instead of the uniform --prompt-pad")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged only: share resident prompt pages "
+                         "across requests (radix index + copy-on-write)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="with --prefix-cache: pin a random shared head "
+                         "of this many tokens (a --page-size multiple) "
+                         "via register_prefix and lead every request "
+                         "with it")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: tokens drafted per "
                          "verify step (0 disables; the decode loop then "
@@ -93,18 +101,29 @@ def main() -> int:
                        temperature=args.temperature, seed=args.seed,
                        page_size=args.page_size, num_pages=args.num_pages,
                        prompt_buckets=args.prompt_buckets,
+                       prefix_cache=args.prefix_cache,
                        spec_k=spec_k, spec_draft=args.spec_draft)
     server = Engine(cfg, mesh, scfg, params)
 
     rng_np = np.random.default_rng(args.seed)
+    handle = None
+    if args.shared_prefix:
+        handle = server.register_prefix(rng_np.integers(
+            0, min(cfg.vocab_size, 1024),
+            size=args.shared_prefix).astype(np.int32))
     for _ in range(args.requests):
-        L = int(rng_np.integers(4, args.prompt_len + 1))
+        # pinned-head sharing needs equal padded heads (left-padding),
+        # so the demo fixes the suffix length when a prefix is pinned
+        L = (args.prompt_len if handle is not None
+             else int(rng_np.integers(4, args.prompt_len + 1)))
         server.submit(rng_np.integers(
-            0, min(cfg.vocab_size, 1024), size=L).astype(np.int32))
+            0, min(cfg.vocab_size, 1024), size=L).astype(np.int32),
+            prefix=handle)
 
     t0 = time.time()
     done = server.run()
     dt = time.time() - t0
+    stats = server.stats()                  # typed EngineStats snapshot
     toks = sum(len(r.out) for r in done)
     ttfts = sorted(server.ttfts_s())
     report = {
@@ -114,24 +133,30 @@ def main() -> int:
         "ttft_p50_ms": round(1e3 * ttfts[len(ttfts) // 2], 2)
         if ttfts else None,
         "decode_chunk": scfg.decode_chunk,
-        "host_syncs": server.sync_count,
-        "prefills": server.stats["prefills"],
-        "kv_cache_mb": round(server.cache_bytes() / 2**20, 2),
+        "host_syncs": stats.sync_count,
+        "prefills": stats.prefills,
+        "kv_cache_mb": round(stats.cache_bytes / 2**20, 2),
     }
     if scfg.paged:
         report.update({
             "page_size": scfg.page_size,
             "pool_pages": scfg.pool_pages,
-            "peak_pages": server.stats["peak_pages"],
-            "admission_waits": server.stats["admission_waits"],
+            "peak_pages": stats.peak_pages,
+            "admission_waits": stats.admission_waits,
+        })
+    if scfg.prefix_cache:
+        report.update({
+            "prefix_hits": stats.prefix_hits,
+            "shared_pages": stats.shared_pages,
+            "cow_copies": stats.cow_copies,
         })
     if scfg.spec:
         report.update({
             "spec_k": scfg.spec_k,
             "spec_draft": scfg.spec_draft,
-            "drafted_tokens": server.stats["drafted"],
-            "accepted_tokens": server.stats["accepted"],
-            "acceptance_rate": round(server.acceptance_rate(), 4),
+            "drafted_tokens": stats.drafted,
+            "accepted_tokens": stats.accepted,
+            "acceptance_rate": round(stats.acceptance_rate, 4),
         })
     print(json.dumps(report))
     return 0

@@ -269,6 +269,26 @@ def merge_cache_slot(cache: Params, slot_cache: Params, slot: Array) -> Params:
         cache, slot_cache.astype(cache.dtype), slot, axis=1)
 
 
+def copy_page(cache: Params, src: Array, dst: Array) -> Params:
+    """Device-copy one physical page, all layers: the copy-on-write half
+    of prefix sharing.
+
+    ``src``/``dst`` are traced page-id scalars into the pool axis of
+    every paged subtree (``kp``/``vp`` are ``(nl, pages+1, ps, Hk, D)``).
+    The whole page is copied; rows past the divergence point are
+    overwritten by the suffix prefill's scatter or dead by kv-length
+    masking, so over-copying is harmless.  Non-paged subtrees pass
+    through untouched.
+    """
+    if _is_paged(cache):
+        return {"kp": cache["kp"].at[:, dst].set(cache["kp"][:, src]),
+                "vp": cache["vp"].at[:, dst].set(cache["vp"][:, src]),
+                "ptab": cache["ptab"]}
+    if isinstance(cache, dict):
+        return {k: copy_page(v, src, dst) for k, v in cache.items()}
+    return cache
+
+
 def set_page_table(cache: Params, table: Array) -> Params:
     """Replace every paged subtree's page table with ``table``.
 

@@ -306,7 +306,11 @@ def attention(params: Params, cfg: ModelConfig, x: Array, positions: Array,
         # position, so the downstream mask/qpos math is unchanged; rows
         # past kv_len read whatever the mapped page holds (null-page
         # garbage included) and are masked exactly like monolithic
-        # garbage rows.
+        # garbage rows.  Prefix sharing may map ONE page into SEVERAL
+        # table rows: safe by the same math — gathers tolerate duplicate
+        # page ids, and each slot's scatter lands at its own positions
+        # (≥ its prompt rows), which always resolve to slot-private
+        # pages, so a shared page is only ever read.
         pt = cache["ptab"]                          # (B, max_pages)
         ps = cache["kp"].shape[1]
         B, Lq = x.shape[0], x.shape[1]

@@ -3,32 +3,46 @@
 
 v2 (``serving.api``): ``Engine.submit() -> RequestHandle``,
 ``Engine.step() -> list[TokenEvent]``, per-handle token iterators,
-mid-run admission, ``cancel()``.  v1 (``serving.engine``): the
-batch-style ``Server`` shim and the old loop-builder signatures.
+mid-run admission, ``cancel()``, ``register_prefix() -> PrefixHandle``
+(prefix-sharing pins over the paged backend) and the typed
+``Engine.stats() -> EngineStats``.  v1 (``serving.engine``): the
+batch-style ``Server`` shim and the old loop-builder signatures —
+resolved lazily so the shim's once-per-process ``DeprecationWarning``
+only fires when the v1 surface is actually used.
 """
 
 from repro.serving.api import Engine, RequestHandle
 from repro.serving.config import ServeConfig
-from repro.serving.state import (Request, RequestStatus, TokenEvent,
-                                 init_decode_state, sample_token,
-                                 sample_token_folded, sample_token_slots)
+from repro.serving.state import (EngineStats, Request, RequestStatus,
+                                 TokenEvent, init_decode_state,
+                                 sample_token, sample_token_folded,
+                                 sample_token_slots)
 from repro.serving.backends import (CacheBackend, MonoBackend,
                                     PagedBackend)
-from repro.serving.engine import (Server, build_decode_loop,
-                                  build_decode_step,
-                                  build_paged_decode_loop,
-                                  build_paged_prefill_slot_step,
-                                  build_prefill_slot_step,
-                                  build_prefill_step,
-                                  build_prefill_wave_step,
-                                  build_spec_decode_loop)
+from repro.serving.prefix import PrefixHandle, PrefixIndex
+from repro.serving.loops import (build_decode_step, build_prefill_step,
+                                 build_spec_decode_loop)
+
+# v1 names served lazily through the deprecated serving.engine shim
+_V1_NAMES = ("Server", "build_decode_loop", "build_paged_decode_loop",
+             "build_paged_prefill_slot_step", "build_prefill_slot_step",
+             "build_prefill_wave_step")
 
 __all__ = [
     "Engine", "RequestHandle", "TokenEvent", "Request", "RequestStatus",
     "ServeConfig", "Server", "CacheBackend", "MonoBackend", "PagedBackend",
+    "PrefixHandle", "PrefixIndex", "EngineStats",
     "init_decode_state", "sample_token", "sample_token_folded",
     "sample_token_slots", "build_decode_loop", "build_decode_step",
     "build_paged_decode_loop", "build_paged_prefill_slot_step",
     "build_prefill_slot_step", "build_prefill_step",
     "build_prefill_wave_step", "build_spec_decode_loop",
 ]
+
+
+def __getattr__(name: str):
+    if name in _V1_NAMES:
+        from repro.serving import engine as _engine
+        return getattr(_engine, name)
+    raise AttributeError(
+        f"module 'repro.serving' has no attribute {name!r}")

@@ -16,6 +16,14 @@ One scheduler, pluggable cache backends, request-level control:
     never emits another token.
   * ``run()`` / ``generate()`` — drain-the-queue convenience wrappers
     over ``step()`` (what the deprecated ``Server`` shim calls).
+  * ``register_prefix(tokens)`` → :class:`~repro.serving.prefix
+    .PrefixHandle` — pin a shared prompt head in the paged backend's
+    prefix index; ``submit(..., prefix=handle)`` prepends it.  Sharing
+    itself is automatic (content-hashed at admission) whenever
+    ``ServeConfig.prefix_cache`` is on.
+  * ``stats()`` → :class:`~repro.serving.state.EngineStats` — the typed
+    counter snapshot (``stats[...]`` dict access stays for one release
+    with a ``DeprecationWarning``).
   * iterating a handle streams its tokens in order, driving ``step()``
     on demand — single-threaded streaming with no background thread.
 
@@ -37,7 +45,9 @@ next chunk's block.  Greedy output is bit-identical to the pre-v2
 from __future__ import annotations
 
 import itertools
+import sys
 import time
+import warnings
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
 
 import jax
@@ -51,16 +61,61 @@ from repro.kernels import dispatch
 from repro.models.config import ModelConfig
 from repro.serving.backends import CacheBackend, make_backend
 from repro.serving.config import ServeConfig
-from repro.serving.state import (Request, RequestStatus, TokenEvent,
-                                 _fresh_stats, init_decode_state)
+from repro.serving.prefix import PrefixHandle
+from repro.serving.state import (EngineStats, Request, RequestStatus,
+                                 TokenEvent, _device_fetch, _fresh_stats,
+                                 init_decode_state)
 
 
 def _fetch(tree: Any) -> Any:
-    """Resolve the single device→host transfer through the deprecated
-    ``repro.serving.engine`` module, so tests that monkeypatch
-    ``engine._device_fetch`` keep intercepting every sync."""
-    from repro.serving import engine as _compat
-    return _compat._device_fetch(tree)
+    """The single device→host transfer.  When the deprecated
+    ``repro.serving.engine`` module is already imported, resolve through
+    its ``_device_fetch`` attribute so tests that monkeypatch it keep
+    intercepting every sync; pure-v2 processes never import the shim
+    (and so never trigger its deprecation warning)."""
+    compat = sys.modules.get("repro.serving.engine")
+    if compat is not None:
+        return compat._device_fetch(tree)
+    return _device_fetch(tree)
+
+
+class _StatsAccessor:
+    """``engine.stats`` — callable (v2) and, for one release, still
+    subscriptable like the old raw dict.
+
+    ``engine.stats()`` returns the typed :class:`EngineStats` snapshot;
+    ``engine.stats["peak_pages"]`` keeps working with a
+    ``DeprecationWarning`` (the v1 surface).  The engine and backends
+    mutate the underlying dict directly (``engine._stats``)."""
+
+    def __init__(self, engine: "Engine"):
+        self._engine = engine
+
+    def __call__(self) -> EngineStats:
+        e = self._engine
+        d = e._stats
+        return EngineStats(
+            chunk_s=list(d["chunk_s"]),
+            chunk_tokens=list(d["chunk_tokens"]),
+            prefills=d["prefills"], peak_pages=d["peak_pages"],
+            admission_waits=d["admission_waits"], drafted=d["drafted"],
+            accepted=d["accepted"], prefix_hits=d["prefix_hits"],
+            shared_pages=d["shared_pages"], cow_copies=d["cow_copies"],
+            sync_count=e.sync_count, cache_bytes=e._cache_nbytes(),
+            acceptance_rate=d["accepted"] / max(d["drafted"], 1))
+
+    def __getitem__(self, key: str) -> Any:
+        warnings.warn(
+            "dict-style engine.stats[...] access is deprecated; call "
+            "engine.stats() for a typed EngineStats snapshot",
+            DeprecationWarning, stacklevel=2)
+        return self._engine._stats[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._engine._stats
+
+    def __repr__(self) -> str:
+        return f"_StatsAccessor({self._engine._stats!r})"
 
 
 class RequestHandle:
@@ -206,7 +261,15 @@ class Engine:
         self._uid = itertools.count()
         self._key = jax.random.key(scfg.seed)
         self.sync_count = 0
-        self.stats: Dict[str, Any] = _fresh_stats()
+        self._stats: Dict[str, Any] = _fresh_stats()
+        self.stats = _StatsAccessor(self)
+
+        if scfg.prefix_cache and MZ.family(cfg) != "lm":
+            raise ValueError(
+                "prefix_cache shares KV pages by position; the "
+                f"'{MZ.family(cfg)}' family carries per-request state "
+                "outside the page pool (recurrent/cross caches) — only "
+                "decoder-only ('lm') models can share prefixes")
 
         if scfg.spec and draft_params is None:
             if scfg.spec_draft == "pack":
@@ -241,7 +304,7 @@ class Engine:
 
         self._backend: CacheBackend = make_backend(
             cfg, mesh, scfg, self._abstract_params, self._abstract_draft,
-            self._abstract_cache, self.stats)
+            self._abstract_cache, self._stats)
         self._slot_req: List[Optional[Request]] = [None] * scfg.slots
         self._temps = np.full((scfg.slots,), scfg.temperature, np.float32)
         self._cache = None
@@ -260,24 +323,33 @@ class Engine:
 
     def reset_stats(self) -> None:
         """Zero the serving counters — including the speculative
-        drafted/accepted tallies behind :meth:`acceptance_rate` —
+        drafted/accepted tallies and the prefix-sharing tallies —
         (benchmarks call this after their compile warm-up pass)."""
         self.sync_count = 0
-        self.stats.clear()                  # in place: the backend and
-        self.stats.update(_fresh_stats())   # callers hold references
+        self._stats.clear()                 # in place: the backend and
+        self._stats.update(_fresh_stats())  # callers hold references
 
     def acceptance_rate(self) -> float:
-        """Accepted / drafted tokens since the last ``reset_stats`` (1.0
-        for a draft the verifier never corrects; 0.0 with speculation
-        off or before any chunk ran)."""
-        return self.stats["accepted"] / max(self.stats["drafted"], 1)
+        """Deprecated: read ``engine.stats().acceptance_rate``."""
+        warnings.warn(
+            "Engine.acceptance_rate() is deprecated; read "
+            "engine.stats().acceptance_rate",
+            DeprecationWarning, stacklevel=2)
+        return self._stats["accepted"] / max(self._stats["drafted"], 1)
 
-    def cache_bytes(self) -> int:
-        """Allocated KV/state cache footprint in bytes (the buffers
-        ``init_cache`` materializes — pool + tables for paged, the full
-        ``slots × max_len`` block for monolithic)."""
+    def _cache_nbytes(self) -> int:
         return sum(int(np.prod(l.shape)) * l.dtype.itemsize
                    for l in jax.tree.leaves(self._abstract_cache))
+
+    def cache_bytes(self) -> int:
+        """Deprecated: read ``engine.stats().cache_bytes`` (the buffers
+        ``init_cache`` materializes — pool + tables for paged, the full
+        ``slots × max_len`` block for monolithic)."""
+        warnings.warn(
+            "Engine.cache_bytes() is deprecated; read "
+            "engine.stats().cache_bytes",
+            DeprecationWarning, stacklevel=2)
+        return self._cache_nbytes()
 
     def ttfts_s(self) -> List[float]:
         """TTFT of every finished request that emitted a token."""
@@ -304,10 +376,54 @@ class Engine:
                 f"max_len - 1 = {self.scfg.max_len - 1})")
         return arr.astype(np.int32)
 
+    def register_prefix(self, tokens: Union[Sequence[int], np.ndarray]
+                        ) -> PrefixHandle:
+        """Pin a shared prompt head; returns its :class:`PrefixHandle`.
+
+        ``tokens`` must be a whole number of pages (``len %
+        page_size == 0``) — they are computed once into index-owned
+        pages (reusing any blocks already resident) and every page takes
+        a refcount the handle holds, so the head stays warm across slot
+        churn and eviction until :meth:`PrefixHandle.release`.
+
+        Contract: the registered tokens occupy prompt rows ``[0, len)``.
+        Because prompts are left-padded to their bucket width, a
+        submission shares these pages exactly when its *padded* head
+        equals them — i.e. the full prompt (prefix + suffix) fills its
+        bucket, or the caller registers the padded head it will submit.
+        ``submit(..., prefix=handle)`` prepends the handle's tokens for
+        you.  Hash-matched sharing between plain submissions needs no
+        handle; registration adds *pinning* (residence guarantees), not
+        matching.
+        """
+        scfg = self.scfg
+        if not scfg.prefix_cache:
+            raise ValueError(
+                "register_prefix needs ServeConfig.prefix_cache=True "
+                "(and the paged layout, page_size > 0)")
+        arr = self._coerce_prompt(tokens)
+        if len(arr) % scfg.page_size:
+            raise ValueError(
+                f"a registered prefix must be a whole number of pages: "
+                f"got {len(arr)} tokens with page_size={scfg.page_size}")
+        with self.mesh:
+            self._ensure_device_state()
+            nodes, page_row = self._backend.register_prefix(arr)
+            if page_row is not None:
+                fill = self._backend.prefix_fill_step(len(arr))
+                self._cache = fill(self.params,
+                                   {"tokens": jnp.asarray(arr[None])},
+                                   self._cache, jnp.asarray(page_row))
+        return PrefixHandle(self, arr.copy(), nodes)
+
+    def _release_prefix(self, handle: PrefixHandle) -> None:
+        self._backend.release_prefix(handle._nodes)
+
     def submit(self, prompt: Union[Sequence[int], np.ndarray], *,
                max_new: Optional[int] = None,
                temperature: Optional[float] = None,
-               stream: bool = False) -> RequestHandle:
+               stream: bool = False,
+               prefix: Optional[PrefixHandle] = None) -> RequestHandle:
         """Queue one request; returns its :class:`RequestHandle`.
 
         ``prompt`` may be a Python list or any 1-D integer array.
@@ -319,8 +435,23 @@ class Engine:
         ``scfg.temperature`` and may differ per request on the
         non-speculative loops (0 → greedy).  Admission happens at the
         next ``step()`` — submitting mid-run is the point.
+
+        ``prefix`` prepends a :meth:`register_prefix` handle's tokens to
+        ``prompt`` (the session posture: register the system prompt
+        once, submit only the user turn).  Admission maps the pinned
+        pages whenever the combined prompt's padded head lines up with
+        them — see :meth:`register_prefix` for the alignment contract;
+        greedy output is bit-identical either way.
         """
         scfg = self.scfg
+        if prefix is not None:
+            if prefix._engine is not self:
+                raise ValueError("prefix handle belongs to a different "
+                                 "engine")
+            if prefix.released:
+                raise ValueError("prefix handle was released")
+            prompt = np.concatenate(
+                [prefix.tokens, np.asarray(prompt, np.int32).ravel()])
         arr = self._coerce_prompt(prompt)
         if max_new is None:
             max_new = scfg.max_new_tokens
@@ -432,22 +563,31 @@ class Engine:
                 self.params, {"tokens": jnp.asarray(prompts)}, self._cache,
                 jnp.asarray(valid), jnp.asarray(budgets),
                 jnp.asarray(self._temps), sk)
-            self.stats["prefills"] += len(take)
+            self._stats["prefills"] += len(take)
             return
         for i in range(scfg.slots):
             if self._slot_req[i] is not None or not self.queue:
                 continue
             r = self.queue[0]
-            if not self._backend.can_admit(len(r.prompt), r.max_new):
-                self.stats["admission_waits"] += 1
+            # the padded rows are what the prefix index keys on — hand
+            # them to admission so matching and COW planning happen in
+            # the backend (layouts without an index ignore them)
+            padded = self._pad_prompt(
+                r, self._backend.prompt_rows(len(r.prompt)))
+            if not self._backend.can_admit(len(r.prompt), r.max_new,
+                                           tokens=padded[0]):
+                self._stats["admission_waits"] += 1
                 break
             self.queue.pop(0)
-            rows = self._backend.admit(i, len(r.prompt), r.max_new)
+            rows = self._backend.admit(i, len(r.prompt), r.max_new,
+                                       tokens=padded[0])
+            start, cow = self._backend.prefill_plan(i)
             temp = (scfg.temperature if r.temperature is None
                     else r.temperature)
             self._key, sk = jax.random.split(self._key)
-            self._cache, self._state = self._backend.prefill_step(rows)(
-                self.params, {"tokens": jnp.asarray(self._pad_prompt(r, rows))},
+            self._cache, self._state = self._backend.prefill_step(
+                rows, start, cow)(
+                self.params, {"tokens": jnp.asarray(padded[:, start:])},
                 self._cache, self._state, jnp.asarray(i, jnp.int32),
                 jnp.asarray(r.max_new, jnp.int32),
                 jnp.asarray(temp, jnp.float32), sk,
@@ -455,7 +595,7 @@ class Engine:
             self._temps[i] = temp
             r.slot, r.status = i, RequestStatus.RUNNING
             self._slot_req[i] = r
-            self.stats["prefills"] += 1
+            self._stats["prefills"] += 1
 
     def _run_chunk(self, loop, key, extra):
         """Invoke one decode chunk and make the single device→host fetch
@@ -467,8 +607,8 @@ class Engine:
                 key, *extra)
             blk, emit, done, dr, ac = _fetch(
                 (tokens, emitted, state["done"], dr, ac))
-            self.stats["drafted"] += int(dr)
-            self.stats["accepted"] += int(ac)
+            self._stats["drafted"] += int(dr)
+            self._stats["accepted"] += int(ac)
         else:
             cache, state, tokens, emitted = loop(
                 self.params, self._cache, self._state,
@@ -493,8 +633,8 @@ class Engine:
                         r.first_token_s = now
                     self._backend.note_commit(i)
                     emitted.append((r, len(r.out) - 1))
-        self.stats["chunk_s"].append(dt)
-        self.stats["chunk_tokens"].append(len(emitted))
+        self._stats["chunk_s"].append(dt)
+        self._stats["chunk_tokens"].append(len(emitted))
         for i in range(scfg.slots):
             r = self._slot_req[i]
             if r is not None and done[i]:

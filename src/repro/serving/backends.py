@@ -34,23 +34,32 @@ from jax.sharding import Mesh
 from repro.models.config import ModelConfig
 from repro.serving import loops
 from repro.serving.config import ServeConfig
+from repro.serving.prefix import PrefixIndex
 
 
 class CacheBackend(Protocol):
     """What the scheduler needs from a cache layout.
 
     Lifecycle per request: ``can_admit`` → ``admit`` (reserve + return
-    the prompt-row width) → ``prefill_step``/``prefill_args`` (the jitted
-    program and its layout-specific extra operands) → per chunk
-    ``begin_chunk`` (returns the decode loop + extra traced args) /
-    ``note_commit`` (a token landed) / ``end_chunk`` — then ``retire``.
+    the prompt-row width; with prefix sharing also match the index and
+    map shared pages) → ``prefill_plan``/``prefill_step``/
+    ``prefill_args`` (where prefill starts, the jitted program and its
+    layout-specific extra operands) → per chunk ``begin_chunk`` (returns
+    the decode loop + extra traced args) / ``note_commit`` (a token
+    landed) / ``end_chunk`` — then ``retire``.  ``tokens`` is the
+    request's *padded* prompt rows (sharing keys on the padded layout);
+    layouts without an index ignore it.
     """
     paged: bool
 
     def prompt_rows(self, prompt_len: int) -> int: ...
-    def can_admit(self, prompt_len: int, max_new: int) -> bool: ...
-    def admit(self, slot: int, prompt_len: int, max_new: int) -> int: ...
-    def prefill_step(self, rows: int) -> Callable: ...
+    def can_admit(self, prompt_len: int, max_new: int,
+                  tokens: Optional[np.ndarray] = None) -> bool: ...
+    def admit(self, slot: int, prompt_len: int, max_new: int,
+              tokens: Optional[np.ndarray] = None) -> int: ...
+    def prefill_plan(self, slot: int) -> Tuple[int, bool]: ...
+    def prefill_step(self, rows: int, start: int = 0,
+                     cow: bool = False) -> Callable: ...
     def prefill_args(self, slot: int) -> Tuple: ...
     def wave_step(self) -> Optional[Callable]: ...
     def begin_chunk(self, live_slots: List[int]) -> Tuple[Callable, Tuple]:
@@ -73,17 +82,29 @@ class _BackendBase:
         self._ap, self._ad, self._ac = (abstract_params, abstract_draft,
                                         abstract_cache)
         self.stats = stats
-        self._prefill_steps: Dict[int, Callable] = {}
+        self._prefill_steps: Dict[Tuple[int, int, bool], Callable] = {}
         self._decode_loops: Dict[Optional[int], Callable] = {}
         self._wave: Optional[Callable] = None
 
-    def prefill_step(self, rows: int) -> Callable:
-        fn = self._prefill_steps.get(rows)
+    def prefill_plan(self, slot: int) -> Tuple[int, bool]:
+        """(start row, needs-COW-copy) for the slot's pending prefill —
+        (0, False) unless prefix sharing mapped resident pages."""
+        return 0, False
+
+    def prefill_step(self, rows: int, start: int = 0,
+                     cow: bool = False) -> Callable:
+        key = (rows, start, cow)
+        fn = self._prefill_steps.get(key)
         if fn is None:
-            fn = loops.build_prefill_slot_step(
-                self.cfg, self.mesh, self.scfg, self._ap, self._ac,
-                prompt_rows=rows, paged=self.paged)
-            self._prefill_steps[rows] = fn
+            if start or cow:
+                fn = loops.build_prefix_prefill_slot_step(
+                    self.cfg, self.mesh, self.scfg, self._ap, self._ac,
+                    prompt_rows=rows, start=start, cow=cow)
+            else:
+                fn = loops.build_prefill_slot_step(
+                    self.cfg, self.mesh, self.scfg, self._ap, self._ac,
+                    prompt_rows=rows, paged=self.paged)
+            self._prefill_steps[key] = fn
         return fn
 
     def _decode_loop(self, view: Optional[int]) -> Callable:
@@ -110,10 +131,12 @@ class MonoBackend(_BackendBase):
     def prompt_rows(self, prompt_len: int) -> int:
         return self.scfg.prompt_pad
 
-    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+    def can_admit(self, prompt_len: int, max_new: int,
+                  tokens: Optional[np.ndarray] = None) -> bool:
         return True
 
-    def admit(self, slot: int, prompt_len: int, max_new: int) -> int:
+    def admit(self, slot: int, prompt_len: int, max_new: int,
+              tokens: Optional[np.ndarray] = None) -> int:
         return self.scfg.prompt_pad
 
     def prefill_args(self, slot: int) -> Tuple:
@@ -142,7 +165,23 @@ class PagedBackend(_BackendBase):
     """Shared page pool + per-slot page tables (see ``models.attention``
     for the device layout).  The admission *reservation* guarantees a
     request, once admitted, can always reach its budget: live slots can
-    never starve mid-decode, waiting happens at admission instead."""
+    never starve mid-decode, waiting happens at admission instead.
+
+    With ``scfg.prefix_cache`` a :class:`~repro.serving.prefix
+    .PrefixIndex` keys resident full prompt pages by content: admission
+    maps matched pages read-only at the head of the slot's table
+    (refcount +1 each), reserves only the private remainder, and plans
+    the prefill to start at the first non-shared row — with a
+    copy-on-write page copy when the divergence falls mid-page.  Shared
+    pages may then appear in several tables at once: decode only ever
+    *gathers* them (each slot's writes land at its own position, past
+    its prompt rows), so the attention view math is unchanged.  At
+    retirement shared pages are decref'd, not freed — refcount zero
+    moves them to the retained (warm, evictable) set, and they rejoin
+    the free list only through eviction.  With the flag off every code
+    path below reduces exactly to the v1 allocator (same free-list
+    order, same stats).
+    """
 
     paged = True
 
@@ -155,45 +194,210 @@ class PagedBackend(_BackendBase):
         self.slot_need = [0] * scfg.slots
         self.slot_rows = [0] * scfg.slots
         self.ptab = np.zeros((scfg.slots, scfg.max_pages), np.int32)
+        # --- prefix sharing ------------------------------------------
+        self.prefix_on = scfg.prefix_cache
+        self.index: Optional[PrefixIndex] = (
+            PrefixIndex(scfg.page_size, scfg.prefix_cache_pages)
+            if self.prefix_on else None)
+        self.slot_shared: List[List[Any]] = [[] for _ in range(scfg.slots)]
+        self.slot_resv = [0] * scfg.slots      # private pages reserved
+        self.slot_plan: List[Tuple[int, int, int]] = \
+            [(0, 0, 0)] * scfg.slots           # (start, cow_src, cow_dst)
+        self._prefix_fills: Dict[int, Callable] = {}
 
     # --- admission / prefill ------------------------------------------
 
     def prompt_rows(self, prompt_len: int) -> int:
         return self.scfg.prompt_rows(prompt_len)
 
-    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+    def can_admit(self, prompt_len: int, max_new: int,
+                  tokens: Optional[np.ndarray] = None) -> bool:
         need = self.scfg.request_pages(prompt_len, max_new)
-        return self.reserved + need <= self.scfg.pool_pages
+        if not self.prefix_on:
+            return self.reserved + need <= self.scfg.pool_pages
+        # shared hits shrink the private need; retained (refcount-zero)
+        # pages are reclaimable on demand so only live ones count
+        if tokens is not None:
+            rows = self.scfg.prompt_rows(prompt_len)
+            nodes, _ = self.index.match(tokens, rows)
+            need -= min(len(nodes), (rows - 1) // self.scfg.page_size)
+        return (self.reserved + need + self.index.live_pages
+                <= self.scfg.pool_pages)
 
-    def admit(self, slot: int, prompt_len: int, max_new: int) -> int:
+    def admit(self, slot: int, prompt_len: int, max_new: int,
+              tokens: Optional[np.ndarray] = None) -> int:
         scfg = self.scfg
+        ps = scfg.page_size
         rows = scfg.prompt_rows(prompt_len)
         need = scfg.request_pages(prompt_len, max_new)
-        self.reserved += need
         self.slot_need[slot] = need
         self.slot_rows[slot] = rows
         self.ptab[slot] = 0
-        self._alloc(slot, -(-rows // scfg.page_size))
+        self.slot_plan[slot] = (0, 0, 0)
+        if not (self.prefix_on and tokens is not None):
+            self.slot_resv[slot] = need
+            self.reserved += need
+            self._alloc(slot, -(-rows // ps))
+            return rows
+        nodes, partial = self.index.match(tokens, rows)
+        maxb = (rows - 1) // ps        # ≥ 1 row must be recomputed for
+        if len(nodes) > maxb:          # the first-token logits: a full-
+            partial = (nodes[maxb], ps)    # prompt match COWs its tail
+            nodes = nodes[:maxb]           # page and redoes the last row
+        m = len(nodes)
+        start = m * ps
+        r = 0
+        if partial is not None:
+            pnode, r = partial
+            r = min(r, rows - 1 - start)
+        for b, nd in enumerate(nodes):
+            self.index.acquire(nd)
+            self.ptab[slot, b] = nd.page
+        self.slot_shared[slot] = list(nodes)
+        self.slot_resv[slot] = need - m
+        self.reserved += self.slot_resv[slot]
+        self._alloc(slot, -(-rows // ps))
+        cow_src = cow_dst = 0
+        if r >= 1:
+            cow_src, cow_dst = pnode.page, int(self.ptab[slot, m])
+            start = m * ps + r
+            self.stats["cow_copies"] += 1
+        if start:
+            self.stats["prefix_hits"] += 1
+            self.stats["shared_pages"] += m
+        self.slot_plan[slot] = (start, cow_src, cow_dst)
+        self._index_prompt(slot, tokens, rows, m)
         return rows
 
+    def _index_prompt(self, slot: int, tokens: np.ndarray, rows: int,
+                      m: int) -> None:
+        """Publish the slot's freshly computed full prompt blocks
+        (``[m, rows // ps)``) into the index — ownership of those pages
+        transfers from the slot's private list to the trie (refcount 1
+        for this slot; decref'd at retire instead of freed).  Their
+        content becomes valid when this admission's prefill executes,
+        which precedes any matching reader in device program order."""
+        ps = self.scfg.page_size
+        shared = self.slot_shared[slot]
+        parent = shared[-1] if shared else None
+        created = []
+        for b in range(m, rows // ps):
+            node, ok = self.index.insert(
+                parent, tokens[b * ps:(b + 1) * ps],
+                int(self.ptab[slot, b]))
+            if not ok:      # identical block already published (the
+                break       # full-match COW tail) — keep page private
+            self.index.acquire(node)
+            created.append(node)
+            parent = node
+        if created:
+            self.slot_pages[slot] = self.slot_pages[slot][len(created):]
+            shared.extend(created)
+
+    def prefill_plan(self, slot: int) -> Tuple[int, bool]:
+        start, _, cow_dst = self.slot_plan[slot]
+        return start, cow_dst != 0
+
     def prefill_args(self, slot: int) -> Tuple:
-        return (jnp.asarray(self.ptab[slot]),)
+        _, cow_src, cow_dst = self.slot_plan[slot]
+        args: Tuple = (jnp.asarray(self.ptab[slot]),)
+        if cow_dst:
+            args += (jnp.asarray(cow_src, jnp.int32),
+                     jnp.asarray(cow_dst, jnp.int32))
+        return args
 
     def wave_step(self) -> Optional[Callable]:
         return None                 # paged always refills per slot
 
+    # --- registered (pinned) prefixes ---------------------------------
+
+    def register_prefix(self, tokens: np.ndarray
+                        ) -> Tuple[List[Any], Optional[np.ndarray]]:
+        """Pin ``tokens`` (a whole number of pages) in the index: reuse
+        resident blocks, allocate pages for the rest, refcount +1 on the
+        full chain.  Returns ``(nodes, page_row)`` — ``page_row`` is the
+        fill program's page table when any block needs computing,
+        ``None`` when the head was fully resident."""
+        scfg = self.scfg
+        ps = scfg.page_size
+        F = len(tokens) // ps
+        nodes: List[Any] = []
+        kids = self.index.children
+        parent = None
+        b = 0
+        while b < F:
+            child = kids.get(tokens[b * ps:(b + 1) * ps].tobytes())
+            if child is None:
+                break
+            nodes.append(child)
+            parent, kids = child, child.children
+            b += 1
+        n_new = F - b
+        if self.reserved + self.index.live_pages + n_new > scfg.pool_pages:
+            raise RuntimeError(
+                f"cannot pin a {F}-page prefix: {n_new} new pages needed "
+                f"but reservations + pinned/live shared pages leave no "
+                f"room in the {scfg.pool_pages}-page pool — raise "
+                f"num_pages or release other prefixes")
+        for bb in range(b, F):
+            node, _ = self.index.insert(
+                parent, tokens[bb * ps:(bb + 1) * ps], self._take_page())
+            nodes.append(node)
+            parent = node
+        for nd in nodes:
+            self.index.acquire(nd)
+        page_row = None
+        if n_new:
+            page_row = np.zeros(scfg.max_pages, np.int32)
+            for bb, nd in enumerate(nodes):
+                page_row[bb] = nd.page
+        in_use = (scfg.pool_pages - len(self.free_pages)
+                  - self.index.retained_pages)
+        self.stats["peak_pages"] = max(self.stats["peak_pages"], in_use)
+        return nodes, page_row
+
+    def release_prefix(self, nodes: List[Any]) -> None:
+        for nd in nodes:
+            self.free_pages.extend(self.index.release(nd))
+
+    def prefix_fill_step(self, rows: int) -> Callable:
+        fn = self._prefix_fills.get(rows)
+        if fn is None:
+            fn = loops.build_prefix_fill_step(
+                self.cfg, self.mesh, self.scfg, self._ap, self._ac,
+                prompt_rows=rows)
+            self._prefix_fills[rows] = fn
+        return fn
+
     # --- page bookkeeping ---------------------------------------------
 
+    def _take_page(self) -> int:
+        """One free page — from the free list, else by evicting a
+        retained (refcount-zero) prefix page.  The admission accounting
+        (reservations + live shared pages ≤ pool) guarantees one of the
+        two can serve every call."""
+        if self.free_pages:
+            return self.free_pages.pop()
+        if self.prefix_on:
+            page = self.index.evict_one()
+            if page is not None:
+                return page
+        raise RuntimeError("page pool exhausted — admission reservation "
+                           "accounting violated")
+
     def _alloc(self, i: int, target: int) -> None:
-        """Grow slot ``i``'s page list to ``target`` pages: pop from the
-        free list, write the host table row, track the pool high-water
-        mark.  The admission reservation guarantees the free list can
-        serve every call."""
-        while len(self.slot_pages[i]) < target:
-            page = self.free_pages.pop()
-            self.ptab[i, len(self.slot_pages[i])] = page
+        """Grow slot ``i``'s total page count (shared head + private) to
+        ``target``: pop from the free list (evicting retained prefix
+        pages on pressure), write the host table row past the shared
+        head, track the pool high-water mark.  The admission reservation
+        guarantees every call can be served."""
+        base = len(self.slot_shared[i])
+        while base + len(self.slot_pages[i]) < target:
+            page = self._take_page()
+            self.ptab[i, base + len(self.slot_pages[i])] = page
             self.slot_pages[i].append(page)
-        in_use = self.scfg.pool_pages - len(self.free_pages)
+        in_use = self.scfg.pool_pages - len(self.free_pages) \
+            - (self.index.retained_pages if self.prefix_on else 0)
         self.stats["peak_pages"] = max(self.stats["peak_pages"], in_use)
 
     def _ensure(self, i: int) -> None:
@@ -216,9 +420,10 @@ class PagedBackend(_BackendBase):
         pages back so waiting requests can admit; the next chunk's
         ``_ensure`` re-covers)."""
         target = max(-(-self.slot_rows[i] // self.scfg.page_size), 1)
-        while len(self.slot_pages[i]) > target:
+        base = len(self.slot_shared[i])
+        while base + len(self.slot_pages[i]) > target and self.slot_pages[i]:
             page = self.slot_pages[i].pop()
-            self.ptab[i, len(self.slot_pages[i])] = 0
+            self.ptab[i, base + len(self.slot_pages[i])] = 0
             self.free_pages.append(page)
 
     def _view_pages(self, live_rows: int) -> Optional[int]:
@@ -261,13 +466,20 @@ class PagedBackend(_BackendBase):
                 self._trim(i)
 
     def retire(self, slot: int) -> None:
-        """Return slot's pages to the pool and null its table row — the
-        next chunk's table refresh redirects the dead slot's residual
-        writes to the garbage page, so recycled pages can't be
+        """Return slot's private pages to the pool, decref its shared
+        pages (refcount zero retains them warm in the index — they
+        rejoin the pool only through eviction) and null its table row —
+        the next chunk's table refresh redirects the dead slot's
+        residual writes to the garbage page, so recycled pages can't be
         corrupted."""
+        for nd in self.slot_shared[slot]:
+            self.free_pages.extend(self.index.release(nd))
+        self.slot_shared[slot] = []
+        self.slot_plan[slot] = (0, 0, 0)
         self.free_pages.extend(reversed(self.slot_pages[slot]))
         self.slot_pages[slot] = []
-        self.reserved -= self.slot_need[slot]
+        self.reserved -= self.slot_resv[slot]
+        self.slot_resv[slot] = 0
         self.slot_need[slot] = 0
         self.slot_rows[slot] = 0
         self.ptab[slot] = 0

@@ -33,6 +33,14 @@ class ServeConfig:
     #                                 this (≤ prompt_pad) instead of the
     #                                 uniform prompt_pad — short prompts
     #                                 then occupy only their own pages
+    # --- prefix sharing (requires the paged layout) ---
+    prefix_cache: bool = False      # index full prompt pages by content;
+    #                                 admissions that share a padded head
+    #                                 map the resident pages read-only
+    #                                 and prefill only their suffix
+    prefix_cache_pages: int = 0     # cap on *retained* (refcount-zero,
+    #                                 unpinned) cached pages; 0 → keep
+    #                                 all, reclaim only on pool pressure
     # --- speculative decoding (spec_k > 0 switches the decode loop) ---
     spec_k: int = 0                 # tokens drafted per verify; 0 → off
     spec_draft: str = "self"        # draft params when none are passed:
@@ -99,6 +107,14 @@ class ServeConfig:
         if self.decode_chunk <= 0:
             raise ValueError(
                 f"decode_chunk must be positive, got {self.decode_chunk}")
+        if self.prefix_cache and not self.paged:
+            raise ValueError(
+                "prefix_cache shares KV at page granularity and needs the "
+                "paged layout — set page_size > 0")
+        if self.prefix_cache_pages < 0:
+            raise ValueError(
+                f"prefix_cache_pages must be >= 0, got "
+                f"{self.prefix_cache_pages}")
         if self.spec:
             if self.prompt_pad + self.spec_k + 1 > self.max_len:
                 raise ValueError(

@@ -14,11 +14,13 @@ old import surface alive:
     ``serving.loops`` that pin the temperature arguments the v2
     builders take (v2 threads a per-request temperature through).
   * ``_device_fetch`` — still the single device→host transfer point:
-    the v2 engine resolves its fetch through THIS module's attribute,
-    so tests that monkeypatch ``engine._device_fetch`` keep counting
-    every sync.
+    whenever this module is imported, the v2 engine resolves its fetch
+    through THIS module's attribute, so tests that monkeypatch
+    ``engine._device_fetch`` keep counting every sync (pure-v2
+    processes never import the shim and use ``state._device_fetch``).
 
-New code should use :class:`repro.serving.Engine` directly.
+New code should use :class:`repro.serving.Engine` directly.  Importing
+this module emits one ``DeprecationWarning`` per process.
 """
 
 from __future__ import annotations
@@ -27,6 +29,12 @@ import warnings
 from typing import Any, Callable, List, Optional
 
 import jax.numpy as jnp
+
+warnings.warn(
+    "repro.serving.engine is the deprecated v1 serving surface; use "
+    "repro.serving.Engine (submit()/step()/run() with streaming "
+    "handles).  This import warns once per process.",
+    DeprecationWarning, stacklevel=2)
 from jax.sharding import Mesh
 
 from repro.models.config import ModelConfig
@@ -136,10 +144,8 @@ class Server:
 
     def __init__(self, cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
                  params: Any, draft_params: Any = None):
-        warnings.warn(
-            "repro.serving.Server is deprecated; use repro.serving.Engine "
-            "(submit()/step()/run() with streaming handles)",
-            DeprecationWarning, stacklevel=2)
+        # the deprecation warning fires once per process at module
+        # import (above) — not per instantiation
         self.engine = Engine(cfg, mesh, scfg, params,
                              draft_params=draft_params)
 

@@ -166,6 +166,111 @@ def build_prefill_slot_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
         donate_argnums=(2, 3))
 
 
+def build_prefix_prefill_slot_step(cfg: ModelConfig, mesh: Mesh,
+                                   scfg: ServeConfig, abstract_params: Any,
+                                   abstract_cache: Any, prompt_rows: int,
+                                   start: int, cow: bool = False
+                                   ) -> Callable:
+    """(params, tokens (1, rows-start), cache, state, slot, budget, temp,
+    key, page_row[, copy_src, copy_dst]) → (cache, state).
+
+    The prefix-sharing twin of :func:`build_prefill_slot_step`: rows
+    ``[0, start)`` of the prompt are already resident in shared pages
+    mapped read-only into ``page_row``, so only the suffix is computed —
+    a ``models.decode_block`` forward at per-slot position ``start``
+    (the same multi-token decode-shaped path the speculative verify
+    runs, which is bit-exact against full prefill on the greedy stream).
+    The suffix scatter lands entirely in the slot's private pages
+    (positions ≥ ``start``); the shared head is only ever *gathered*.
+
+    ``cow=True`` first device-copies ``copy_src`` → ``copy_dst`` (both
+    traced page ids): the divergent page's common row prefix rides in
+    via the copy, the rows past it are overwritten by the suffix scatter
+    or dead by kv-length masking.  ``start`` is static — one compile per
+    (rows, start, cow) admission shape, same cache discipline as the
+    prompt buckets.
+    """
+    rows, span = prompt_rows, prompt_rows - start
+    pspecs = SH.param_specs(abstract_params, cfg, mesh)
+    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
+    bspecs = SH.batch_specs(
+        {"tokens": jax.ShapeDtypeStruct((1, span), jnp.int32)}, mesh)
+    sspecs = _state_shardings(mesh)
+
+    def prefill(params, batch, cache, state, slot, budget, temp, key,
+                page_row, copy_src=None, copy_dst=None):
+        if cow:
+            cache = MZ.copy_page(cache, copy_src, copy_dst)
+        scratch = MZ.blank_slot_cache(cache)
+        scratch = MZ.set_page_table(scratch, page_row[None])
+        logits, scratch, _ = MZ.decode_block(
+            params, cfg, batch["tokens"], scratch,
+            jnp.full((1,), start, jnp.int32))
+        cache = MZ.merge_cache_slot(cache, scratch, slot)
+        first = sample_token_slots(logits[:, -1, :cfg.vocab_size], key,
+                                   temp[None])[0]
+        state = {
+            "tok": state["tok"].at[slot].set(first),
+            "pos": state["pos"].at[slot].set(rows),
+            "done": state["done"].at[slot].set(False),
+            "left": state["left"].at[slot].set(budget),
+        }
+        return cache, state
+
+    if cow:
+        def step(params, batch, cache, state, slot, budget, temp, key,
+                 page_row, copy_src, copy_dst):
+            return prefill(params, batch, cache, state, slot, budget,
+                           temp, key, page_row, copy_src, copy_dst)
+        extra = (None, None, None)
+    else:
+        def step(params, batch, cache, state, slot, budget, temp, key,
+                 page_row):
+            return prefill(params, batch, cache, state, slot, budget,
+                           temp, key, page_row)
+        extra = (None,)
+
+    return jax.jit(
+        step,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, bspecs),
+                      SH.named(mesh, cspecs), sspecs, None, None, None,
+                      None) + extra,
+        out_shardings=(SH.named(mesh, cspecs), sspecs),
+        donate_argnums=(2, 3))
+
+
+def build_prefix_fill_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                           abstract_params: Any, abstract_cache: Any,
+                           prompt_rows: int) -> Callable:
+    """(params, tokens (1, rows), cache, page_row) → cache.
+
+    ``Engine.register_prefix``'s fill: prefill the registered head into
+    the pages ``page_row`` names, touching no slot's page table or
+    decode state — the scratch shares the pool, the logits are
+    discarded, and the full cache keeps its own tables
+    (:func:`models.unpage_view` adopts only the updated pools).  Blocks
+    the head already had resident are rewritten with bit-identical
+    values (same tokens, same positions), so re-registering is safe.
+    """
+    pspecs = SH.param_specs(abstract_params, cfg, mesh)
+    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
+    bspecs = SH.batch_specs(
+        {"tokens": jax.ShapeDtypeStruct((1, prompt_rows), jnp.int32)}, mesh)
+
+    def step(params, batch, cache, page_row):
+        scratch = MZ.blank_slot_cache(cache)
+        scratch = MZ.set_page_table(scratch, page_row[None])
+        _, scratch = MZ.prefill(params, cfg, batch, scratch)
+        return MZ.unpage_view(scratch, cache)
+
+    return jax.jit(
+        step,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, bspecs),
+                      SH.named(mesh, cspecs), None),
+        out_shardings=SH.named(mesh, cspecs),
+        donate_argnums=(2,))
+
+
 def build_prefill_wave_step(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
                             abstract_params: Any, abstract_cache: Any
                             ) -> Callable:

@@ -67,7 +67,35 @@ class TokenEvent:
 def _fresh_stats() -> Dict[str, Any]:
     return {"chunk_s": [], "chunk_tokens": [], "prefills": 0,
             "peak_pages": 0, "admission_waits": 0,
-            "drafted": 0, "accepted": 0}
+            "drafted": 0, "accepted": 0,
+            "prefix_hits": 0, "shared_pages": 0, "cow_copies": 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """Typed snapshot of the engine's serving counters — what
+    ``Engine.stats()`` returns.
+
+    Replaces the ad-hoc dict/attribute surface (``stats["peak_pages"]``,
+    ``cache_bytes()``, ``acceptance_rate()``): one frozen record with
+    every counter the benchmarks and the launcher read, plus the
+    prefix-sharing tallies.  ``chunk_s`` / ``chunk_tokens`` are the
+    per-chunk wall times and emitted-token counts the latency
+    percentiles derive from.
+    """
+    chunk_s: List[float]            # wall seconds per decode chunk
+    chunk_tokens: List[int]         # tokens emitted per decode chunk
+    prefills: int                   # prompt prefills dispatched
+    peak_pages: int                 # paged: pool high-water mark
+    admission_waits: int            # paged: admissions deferred for pages
+    drafted: int                    # spec: tokens drafted
+    accepted: int                   # spec: drafted tokens accepted
+    prefix_hits: int                # admissions that mapped shared pages
+    shared_pages: int               # pages mapped read-only at admission
+    cow_copies: int                 # copy-on-write page copies
+    sync_count: int                 # device→host transfers
+    cache_bytes: int                # allocated KV/state cache footprint
+    acceptance_rate: float          # accepted / drafted (0 if no spec)
 
 
 def init_decode_state(slots: int) -> Dict[str, Array]:
