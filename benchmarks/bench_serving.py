@@ -388,6 +388,94 @@ def _shared_scenario(mesh) -> list:
     return rows
 
 
+# --- mixed-priority scenario (preemption vs admission wait) ----------------
+# a pool saturated by low-priority batch requests while short interactive
+# requests arrive mid-serve: with priority the scheduler preempts a batch
+# slot (cancel + retire; warm re-admission resumes the suffix), without
+# it the interactive request waits for a batch slot to drain.  The row
+# reports interactive TTFT both ways — the preemption payoff.
+PR_SLOTS = 6                        # slot headroom: arrivals block on
+PR_BATCH = 4                        # *pages*, not slots, so preemption
+PR_BATCH_LEN = 256                  # (not slot-wait) is what's measured
+PR_INTER_LEN = 32                   # interactive prompt tokens
+PR_BATCH_NEW = 16 if SMOKE else 48
+PR_INTER_NEW = 4
+PR_INTER_N = 3                      # interactive arrivals, spaced out
+PR_GAP = 2                          # scheduler ticks between arrivals
+
+
+def _preempt_serve(cfg, mesh, params, scfg, batch, inter, priority):
+    eng = Engine(cfg, mesh, scfg, params)
+
+    def one_pass():
+        t0 = time.perf_counter()
+        for p in batch:
+            eng.submit(p, max_new=PR_BATCH_NEW)
+        ih, tick = [], 0
+        while eng.queue or eng.num_live or len(ih) < len(inter):
+            if tick and tick % PR_GAP == 0 and len(ih) < len(inter):
+                ih.append(eng.submit(inter[len(ih)], max_new=PR_INTER_NEW,
+                                     priority=priority))
+            eng.step()
+            tick += 1
+        return ih, time.perf_counter() - t0
+
+    # greedy + fixed arrival ticks → the warm pass replays the exact
+    # timed schedule, compiling every geometry it will touch (including
+    # the preempt-resume prefill at rows0+len(out))
+    one_pass()
+    eng.finished.clear()
+    eng.reset_stats()
+    ih, wall = one_pass()
+    stats = eng.stats()
+    toks = sum(len(r.out) for r in eng.finished)
+    ttft = np.asarray([h.ttft_s for h in ih
+                       if h.ttft_s is not None]) * 1e3
+    if ttft.size == 0:
+        ttft = np.zeros(1)
+    return {"tokens": toks, "tok_per_s": toks / wall,
+            "inter_ttft_p50_ms": float(np.percentile(ttft, 50)),
+            "inter_ttft_p95_ms": float(np.percentile(ttft, 95)),
+            "preemptions": stats.preemptions,
+            "admission_waits": stats.admission_waits}
+
+
+def _preempt_scenario(mesh) -> list:
+    cfg, params = _model("dense")
+    rng = np.random.default_rng(3)
+    batch = [rng.integers(1, VOCAB, size=PR_BATCH_LEN).astype(np.int32)
+             for _ in range(PR_BATCH)]
+    inter = [rng.integers(1, VOCAB, size=PR_INTER_LEN).astype(np.int32)
+             for _ in range(PR_INTER_N)]
+    base = ServeConfig(
+        slots=PR_SLOTS, max_len=PR_BATCH_LEN + 2 * PR_BATCH_NEW,
+        prompt_pad=PR_BATCH_LEN, max_new_tokens=PR_BATCH_NEW,
+        decode_chunk=4, temperature=0.0, eos_token=-1,
+        page_size=HET_PAGE, prompt_buckets=HET_BUCKET, page_view_chunk=8)
+    # pool fits exactly the batch saturation: an interactive arrival
+    # finds a free slot but no pages until a batch request retires
+    # (admission wait) or is preempted (priority)
+    pool = PR_BATCH * base.request_pages(PR_BATCH_LEN, PR_BATCH_NEW)
+    import dataclasses
+    scfg = dataclasses.replace(base, num_pages=pool)
+    pre = _preempt_serve(cfg, mesh, params, scfg, batch, inter, priority=1)
+    wait = _preempt_serve(cfg, mesh, params, scfg, batch, inter, priority=0)
+    return [{
+        "config": "mixed-priority-preempt", "slots": PR_SLOTS,
+        "tokens": pre["tokens"],
+        "tok_per_s": round(pre["tok_per_s"], 1),
+        "inter_ttft_p50_ms": round(pre["inter_ttft_p50_ms"], 3),
+        "inter_ttft_p95_ms": round(pre["inter_ttft_p95_ms"], 3),
+        "preemptions": pre["preemptions"],
+        "base_tok_per_s": round(wait["tok_per_s"], 1),
+        "base_inter_ttft_p50_ms": round(wait["inter_ttft_p50_ms"], 3),
+        "base_inter_ttft_p95_ms": round(wait["inter_ttft_p95_ms"], 3),
+        "base_admission_waits": wait["admission_waits"],
+        "ttft_p95_speedup": round(
+            wait["inter_ttft_p95_ms"]
+            / max(pre["inter_ttft_p95_ms"], 1e-9), 2)}]
+
+
 def _spec_scenario(mesh, paged_tok_per_s: float) -> list:
     """Speculative serving of the heterogeneous mix vs the paged
     baseline: ``spec-k{K}`` rows self-draft (acceptance ≈ 1 — the
@@ -464,6 +552,7 @@ def run() -> dict:
                      if r["config"] == "het-paged")
     rows.extend(_spec_scenario(mesh, paged_tps))
     rows.extend(_shared_scenario(mesh))
+    rows.extend(_preempt_scenario(mesh))
     return {"rows": rows, "decode_chunk": DECODE_CHUNK, "max_new": MAX_NEW,
             "het": {"lens": HET_LENS, "page_size": HET_PAGE,
                     "max_len": HET_MAX_LEN, "pool_pages": _het_pool_pages(),
@@ -472,6 +561,11 @@ def run() -> dict:
             "shared": {"heads": list(SH_HEADS), "suffix": SH_SUFFIX,
                        "requests": SH_REQS, "max_new": SH_MAX_NEW,
                        "page_size": HET_PAGE},
+            "preempt": {"slots": PR_SLOTS, "batch_len": PR_BATCH_LEN,
+                        "batch_new": PR_BATCH_NEW,
+                        "inter_len": PR_INTER_LEN,
+                        "inter_new": PR_INTER_NEW,
+                        "interactive": PR_INTER_N},
             "backend": jax.default_backend()}
 
 
@@ -484,7 +578,7 @@ def main(out=None) -> None:
     print("config,slots,tokens,tok_per_s,p50_ms,p95_ms,ttft_p50_ms,"
           "ttft_p95_ms,syncs,ref_tok_per_s,speedup")
     for r in out["rows"]:
-        if r["config"].startswith(("het-", "spec-", "shared-")):
+        if r["config"].startswith(("het-", "spec-", "shared-", "mixed-")):
             continue
         print(f"{r['config']},{r['slots']},{r['tokens']},"
               f"{r['tok_per_s']},{r['p50_ms']},{r['p95_ms']},"
@@ -528,6 +622,24 @@ def main(out=None) -> None:
                   f"{r['base_ttft_p50_ms']},{r['base_kv_alloc_mb']},"
                   f"{r['ttft_speedup']},{r['kv_ratio']},"
                   f"{r['admission_waits']}")
+    mixed = [r for r in out["rows"] if r["config"].startswith("mixed-")]
+    if mixed:
+        pr = out.get("preempt", {})
+        print(f"# mixed-priority serving on {pr.get('slots')} slots — "
+              f"{pr.get('batch_len')}-token batch requests saturate the "
+              f"pool, {pr.get('interactive')} interactive arrivals "
+              f"mid-run: priority preemption vs admission wait")
+        print("config,slots,tokens,tok_per_s,inter_ttft_p50_ms,"
+              "inter_ttft_p95_ms,preemptions,base_tok_per_s,"
+              "base_inter_ttft_p50_ms,base_inter_ttft_p95_ms,"
+              "base_admission_waits,ttft_p95_speedup")
+        for r in mixed:
+            print(f"{r['config']},{r['slots']},{r['tokens']},"
+                  f"{r['tok_per_s']},{r['inter_ttft_p50_ms']},"
+                  f"{r['inter_ttft_p95_ms']},{r['preemptions']},"
+                  f"{r['base_tok_per_s']},{r['base_inter_ttft_p50_ms']},"
+                  f"{r['base_inter_ttft_p95_ms']},"
+                  f"{r['base_admission_waits']},{r['ttft_p95_speedup']}")
     spec = [r for r in out["rows"] if r["config"].startswith("spec-")]
     if spec:
         print(f"# speculative serving on the heterogeneous mix — "

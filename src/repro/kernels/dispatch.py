@@ -40,6 +40,7 @@ import json
 import os
 import threading
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -146,8 +147,31 @@ def has_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+_MODE_OVERRIDE: Optional[str] = None
+
+
+def set_mode_override(mode: Optional[str]) -> Optional[str]:
+    """Force every subsequent mode resolution to ``mode`` (the serving
+    engine's degraded path pins ``"ref"`` after a kernel/numeric fault);
+    ``None`` restores normal resolution.  Wins over both ``impl`` and
+    the ``REPRO_DISPATCH_MODE`` env override — a runtime fault response
+    must beat static configuration.  Returns the previous override so
+    callers (tests, chaos detach) can restore it."""
+    global _MODE_OVERRIDE
+    if mode is not None and mode not in MODES:
+        raise ValueError(f"mode override {mode!r} not in {MODES}")
+    old, _MODE_OVERRIDE = _MODE_OVERRIDE, mode
+    return old
+
+
+def mode_override() -> Optional[str]:
+    return _MODE_OVERRIDE
+
+
 def resolve_mode(impl: str = "auto") -> str:
     """impl → concrete execution mode, honoring REPRO_DISPATCH_MODE."""
+    if _MODE_OVERRIDE is not None:
+        return _MODE_OVERRIDE
     forced = os.environ.get("REPRO_DISPATCH_MODE", "")
     if forced:
         if forced not in MODES:
@@ -177,21 +201,45 @@ class AutotuneCache:
     """Tiny persistent map: dispatch key → {"bm": .., "bkc": .., "us": ..}.
 
     Load-on-first-use; every ``put`` rewrites the file (entries are rare —
-    one per distinct layer geometry).  Corrupt/missing files start empty.
+    one per distinct layer geometry).  A corrupt or partially-written
+    file (truncated JSON from a killed process, or a valid-JSON payload
+    that isn't an object of block dicts) must never take dispatch down:
+    it is ignored with one warning and rebuilt by the next ``put``.
     """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or _default_cache_path()
         self._data: Optional[Dict[str, dict]] = None
         self._lock = threading.Lock()
+        self._warned = False
+
+    def _warn_corrupt(self, why: str) -> None:
+        if not self._warned:
+            self._warned = True
+            warnings.warn(
+                f"ignoring corrupt autotune cache {self.path!r} ({why}); "
+                "it will be rebuilt on the next sweep",
+                RuntimeWarning, stacklevel=3)
 
     def _load(self) -> Dict[str, dict]:
         if self._data is None:
             try:
                 with open(self.path) as f:
-                    self._data = json.load(f)
-            except (OSError, ValueError):
-                self._data = {}
+                    data = json.load(f)
+            except OSError:
+                data = {}
+            except ValueError as e:           # truncated / invalid JSON
+                self._warn_corrupt(str(e))
+                data = {}
+            if not isinstance(data, dict):
+                self._warn_corrupt(
+                    f"top level is {type(data).__name__}, expected object")
+                data = {}
+            elif any(not isinstance(v, dict) for v in data.values()):
+                self._warn_corrupt("non-object entries dropped")
+                data = {k: v for k, v in data.items()
+                        if isinstance(v, dict)}
+            self._data = data
         return self._data
 
     def get(self, key: str) -> Optional[dict]:
@@ -595,7 +643,19 @@ def sparse_matmul(x: Array, weight: Any, *, impl: str = "auto",
         if _CACHE.get(key) is None and autotune is not False:
             blocks = tune(x, weight, mode=decision.mode)
             return entry.run(x, weight, decision.mode, blocks)
-    return entry.run(x, weight, decision.mode, decision.blocks)
+    if decision.mode == "ref" or decision.kernel == "dense":
+        return entry.run(x, weight, decision.mode, decision.blocks)
+    try:
+        return entry.run(x, weight, decision.mode, decision.blocks)
+    except Exception as e:
+        # the Daghero-style posture: a sparse fast path may fail (bad
+        # tiling, lowering bug, backend quirk) but the jnp oracle always
+        # runs — degrade this call rather than take the workload down
+        warnings.warn(
+            f"{decision.kernel} raised in {decision.mode} mode "
+            f"({type(e).__name__}: {e}); falling back to the ref path",
+            RuntimeWarning, stacklevel=2)
+        return _ref_matmul(x, weight)
 
 
 def _ref_matmul(x: Array, weight: Any) -> Array:

@@ -65,6 +65,14 @@ def main() -> int:
                          "~1, measures the amortized dense cost)")
     ap.add_argument("--no-spec", action="store_true",
                     help="force speculation off (overrides --spec-k)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue: submissions beyond "
+                         "this many waiting requests are REJECTED "
+                         "outright (0 = unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=0,
+                    help="per-request deadline; requests still queued "
+                         "or decoding past it finish TIMED_OUT at the "
+                         "next chunk boundary (0 = none)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -102,6 +110,7 @@ def main() -> int:
                        page_size=args.page_size, num_pages=args.num_pages,
                        prompt_buckets=args.prompt_buckets,
                        prefix_cache=args.prefix_cache,
+                       max_queue=args.max_queue,
                        spec_k=spec_k, spec_draft=args.spec_draft)
     server = Engine(cfg, mesh, scfg, params)
 
@@ -118,7 +127,7 @@ def main() -> int:
              else int(rng_np.integers(4, args.prompt_len + 1)))
         server.submit(rng_np.integers(
             0, min(cfg.vocab_size, 1024), size=L).astype(np.int32),
-            prefix=handle)
+            prefix=handle, deadline_ms=args.deadline_ms or None)
 
     t0 = time.time()
     done = server.run()
@@ -136,6 +145,14 @@ def main() -> int:
         "host_syncs": stats.sync_count,
         "prefills": stats.prefills,
         "kv_cache_mb": round(stats.cache_bytes / 2**20, 2),
+        # robustness counters: every contained fault shows up here
+        "timeouts": stats.timeouts,
+        "rejections": stats.rejections,
+        "preemptions": stats.preemptions,
+        "numeric_faults": stats.numeric_faults,
+        "kernel_failures": stats.kernel_failures,
+        "fetch_errors": stats.fetch_errors,
+        "degraded": stats.degraded,
     }
     if scfg.paged:
         report.update({

@@ -12,11 +12,13 @@ only fires when the v1 surface is actually used.
 """
 
 from repro.serving.api import Engine, RequestHandle
+from repro.serving.chaos import (AuditError, ChaosConfig, ChaosMonkey,
+                                 audit_engine)
 from repro.serving.config import ServeConfig
-from repro.serving.state import (EngineStats, Request, RequestStatus,
-                                 TokenEvent, init_decode_state,
-                                 sample_token, sample_token_folded,
-                                 sample_token_slots)
+from repro.serving.state import (TERMINAL_STATUSES, EngineStats, Request,
+                                 RequestStatus, TokenEvent,
+                                 init_decode_state, sample_token,
+                                 sample_token_folded, sample_token_slots)
 from repro.serving.backends import (CacheBackend, MonoBackend,
                                     PagedBackend)
 from repro.serving.prefix import PrefixHandle, PrefixIndex
@@ -31,7 +33,8 @@ _V1_NAMES = ("Server", "build_decode_loop", "build_paged_decode_loop",
 __all__ = [
     "Engine", "RequestHandle", "TokenEvent", "Request", "RequestStatus",
     "ServeConfig", "Server", "CacheBackend", "MonoBackend", "PagedBackend",
-    "PrefixHandle", "PrefixIndex", "EngineStats",
+    "PrefixHandle", "PrefixIndex", "EngineStats", "TERMINAL_STATUSES",
+    "AuditError", "ChaosConfig", "ChaosMonkey", "audit_engine",
     "init_decode_state", "sample_token", "sample_token_folded",
     "sample_token_slots", "build_decode_loop", "build_decode_step",
     "build_paged_decode_loop", "build_paged_prefill_slot_step",

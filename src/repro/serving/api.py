@@ -45,10 +45,11 @@ next chunk's block.  Greedy output is bit-identical to the pre-v2
 from __future__ import annotations
 
 import itertools
+import os
 import sys
 import time
 import warnings
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -61,10 +62,14 @@ from repro.kernels import dispatch
 from repro.models.config import ModelConfig
 from repro.serving.backends import CacheBackend, make_backend
 from repro.serving.config import ServeConfig
+from repro.serving.faults import FaultTolerance
 from repro.serving.prefix import PrefixHandle
-from repro.serving.state import (EngineStats, Request, RequestStatus,
-                                 TokenEvent, _device_fetch, _fresh_stats,
+from repro.serving.state import (TERMINAL_STATUSES, Request, RequestHandle,
+                                 RequestStatus, TokenEvent, _device_fetch,
+                                 _fresh_stats, _StatsAccessor,
                                  init_decode_state)
+
+__all__ = ["Engine", "RequestHandle"]
 
 
 def _fetch(tree: Any) -> Any:
@@ -77,117 +82,6 @@ def _fetch(tree: Any) -> Any:
     if compat is not None:
         return compat._device_fetch(tree)
     return _device_fetch(tree)
-
-
-class _StatsAccessor:
-    """``engine.stats`` — callable (v2) and, for one release, still
-    subscriptable like the old raw dict.
-
-    ``engine.stats()`` returns the typed :class:`EngineStats` snapshot;
-    ``engine.stats["peak_pages"]`` keeps working with a
-    ``DeprecationWarning`` (the v1 surface).  The engine and backends
-    mutate the underlying dict directly (``engine._stats``)."""
-
-    def __init__(self, engine: "Engine"):
-        self._engine = engine
-
-    def __call__(self) -> EngineStats:
-        e = self._engine
-        d = e._stats
-        return EngineStats(
-            chunk_s=list(d["chunk_s"]),
-            chunk_tokens=list(d["chunk_tokens"]),
-            prefills=d["prefills"], peak_pages=d["peak_pages"],
-            admission_waits=d["admission_waits"], drafted=d["drafted"],
-            accepted=d["accepted"], prefix_hits=d["prefix_hits"],
-            shared_pages=d["shared_pages"], cow_copies=d["cow_copies"],
-            sync_count=e.sync_count, cache_bytes=e._cache_nbytes(),
-            acceptance_rate=d["accepted"] / max(d["drafted"], 1))
-
-    def __getitem__(self, key: str) -> Any:
-        warnings.warn(
-            "dict-style engine.stats[...] access is deprecated; call "
-            "engine.stats() for a typed EngineStats snapshot",
-            DeprecationWarning, stacklevel=2)
-        return self._engine._stats[key]
-
-    def __contains__(self, key: str) -> bool:
-        return key in self._engine._stats
-
-    def __repr__(self) -> str:
-        return f"_StatsAccessor({self._engine._stats!r})"
-
-
-class RequestHandle:
-    """Caller-side view of one submitted request.
-
-    Iterating the handle yields its tokens in emission order, calling
-    ``engine.step()`` whenever the buffered stream runs dry — so
-    ``for tok in handle:`` streams tokens as the scheduler produces
-    them, interleaved with any other live requests.
-    """
-
-    def __init__(self, engine: "Engine", req: Request):
-        self._engine = engine
-        self._req = req
-
-    @property
-    def uid(self) -> int:
-        return self._req.uid
-
-    @property
-    def status(self) -> RequestStatus:
-        return self._req.status
-
-    @property
-    def done(self) -> bool:
-        return self._req.status in (RequestStatus.DONE,
-                                    RequestStatus.CANCELLED)
-
-    @property
-    def slot(self) -> Optional[int]:
-        return self._req.slot
-
-    @property
-    def tokens(self) -> List[int]:
-        """Tokens emitted so far (a copy; safe to mutate)."""
-        return list(self._req.out)
-
-    @property
-    def ttft_s(self) -> Optional[float]:
-        return self._req.ttft_s
-
-    def cancel(self) -> None:
-        self._engine.cancel(self)
-
-    def result(self) -> List[int]:
-        """Drive the engine until this request finishes; returns its
-        full output."""
-        for _ in self:
-            pass
-        return self.tokens
-
-    def __iter__(self) -> Iterator[int]:
-        i = 0
-        while True:
-            out = self._req.out
-            while i < len(out):
-                yield out[i]
-                i += 1
-            if self.done:
-                return
-            events = self._engine.step()
-            if (not events and not self.done
-                    and self._req.status is RequestStatus.QUEUED
-                    and not self._engine.num_live):
-                raise RuntimeError(
-                    f"engine made no progress on request {self.uid} "
-                    "(queued, no live slots, empty tick)")
-
-    def __repr__(self) -> str:
-        return (f"RequestHandle(uid={self.uid}, "
-                f"status={self._req.status.value}, "
-                f"tokens={len(self._req.out)})")
 
 
 def _build_plans(params: Any, draft_params: Any, cfg: ModelConfig,
@@ -236,7 +130,7 @@ def _build_plans(params: Any, draft_params: Any, cfg: ModelConfig,
     return plans
 
 
-class Engine:
+class Engine(FaultTolerance):
     """Slot-based continuous batching on one mesh, request-level API.
 
     Every slot carries its own position counter, done mask, token budget
@@ -309,6 +203,15 @@ class Engine:
         self._temps = np.full((scfg.slots,), scfg.temperature, np.float32)
         self._cache = None
         self._state = None
+        # --- fault tolerance: overridable seams + degraded flag --------
+        # instance attributes so the chaos harness (serving.chaos) can
+        # wrap them per engine without monkeypatching modules
+        self.degraded = False
+        self._device_fetch = _fetch
+        self._chaos = None
+        if os.environ.get("REPRO_CHAOS_SEED"):
+            from repro.serving.chaos import ChaosConfig, ChaosMonkey
+            ChaosMonkey(self, ChaosConfig.from_env()).attach()
 
     # --- introspection / stats ----------------------------------------
 
@@ -423,7 +326,9 @@ class Engine:
                max_new: Optional[int] = None,
                temperature: Optional[float] = None,
                stream: bool = False,
-               prefix: Optional[PrefixHandle] = None) -> RequestHandle:
+               prefix: Optional[PrefixHandle] = None,
+               priority: int = 0,
+               deadline_ms: Optional[float] = None) -> RequestHandle:
         """Queue one request; returns its :class:`RequestHandle`.
 
         ``prompt`` may be a Python list or any 1-D integer array.
@@ -442,6 +347,16 @@ class Engine:
         pages whenever the combined prompt's padded head lines up with
         them — see :meth:`register_prefix` for the alignment contract;
         greedy output is bit-identical either way.
+
+        ``priority`` orders admission (higher first; FIFO within a
+        level) and arms preemption: under pool exhaustion the scheduler
+        evicts the lowest-priority running slot *strictly below* the
+        blocked head's priority.  ``deadline_ms`` is a wall-clock budget
+        from submission — at the first chunk boundary past it the
+        request ends ``TIMED_OUT``, queued or running.  When
+        ``scfg.max_queue`` bounds the admission queue, a submission
+        beyond the bound returns an already-finished ``REJECTED`` handle
+        instead of waiting forever.
         """
         scfg = self.scfg
         if prefix is not None:
@@ -457,6 +372,9 @@ class Engine:
             max_new = scfg.max_new_tokens
         if max_new <= 0:
             raise ValueError(f"max_new must be positive, got {max_new}")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be positive, got {deadline_ms}")
         if temperature is not None and scfg.spec \
                 and float(temperature) != scfg.temperature:
             raise ValueError(
@@ -471,14 +389,24 @@ class Engine:
                     f"request needs {need} pages but the pool only has "
                     f"{scfg.pool_pages} — raise num_pages")
         req = Request(uid=next(self._uid), prompt=arr, max_new=max_new,
-                      temperature=temperature, stream=stream)
+                      temperature=temperature, stream=stream,
+                      priority=int(priority), deadline_ms=deadline_ms)
+        if scfg.max_queue and len(self.queue) >= scfg.max_queue:
+            self._stats["rejections"] += 1
+            self._finish(req, None, RequestStatus.REJECTED,
+                         time.perf_counter())
+            return RequestHandle(self, req)
         self.queue.append(req)
         return RequestHandle(self, req)
 
     def cancel(self, handle: Union[RequestHandle, Request, int]) -> None:
         """Request cancellation; takes effect at the next chunk
         boundary (the slot is retired and its pages freed before the
-        next decode chunk, so no further tokens are ever emitted)."""
+        next decode chunk, so no further tokens are ever emitted).
+        Idempotent: cancelling an already-terminal handle — finished,
+        cancelled, timed out, rejected — is a no-op (in particular it
+        can never double-release pages; retirement happens exactly once,
+        when the request leaves its slot)."""
         if isinstance(handle, RequestHandle):
             req = handle._req
         elif isinstance(handle, Request):
@@ -488,7 +416,7 @@ class Engine:
                         if r is not None and r.uid == handle), None)
             if req is None:
                 return
-        if req.status in (RequestStatus.DONE, RequestStatus.CANCELLED):
+        if req.status in TERMINAL_STATUSES:
             return
         req.cancel_requested = True
 
@@ -496,10 +424,17 @@ class Engine:
 
     def _pad_prompt(self, r: Request, rows: Optional[int] = None
                     ) -> np.ndarray:
+        """Left-pad the request's *effective* prompt (original prompt
+        plus any tokens emitted before a preemption) to ``rows``.  A
+        resumed request's width is ``rows0 + emitted``, so its pad count
+        equals the first admission's — the padded layout (and therefore
+        any published prefix pages, and the greedy token stream) is
+        preserved across preempt → requeue → re-prefill."""
         width = rows or self.scfg.prompt_pad
+        eff = r.eff_prompt
         tokens = np.zeros((1, width), np.int32)
-        L = min(len(r.prompt), width)
-        tokens[0, width - L:] = r.prompt[-L:]                  # left-pad
+        L = min(len(eff), width)
+        tokens[0, width - L:] = eff[-L:]                       # left-pad
         return tokens
 
     def _ensure_device_state(self) -> None:
@@ -510,42 +445,55 @@ class Engine:
     def _finish(self, req: Request, slot: Optional[int],
                 status: RequestStatus, now: float) -> None:
         req.done = True
-        req.status = status
+        req.set_status(status)
         req.finish_s = now
         self.finished.append(req)
         if slot is not None:
             self._slot_req[slot] = None
             self._backend.retire(slot)
 
+    def _freeze_slot(self, i: int) -> None:
+        """Stop slot ``i`` decoding without a fetch — two scalar updates
+        ride host→device at the chunk boundary."""
+        self._state = dict(
+            self._state,
+            done=self._state["done"].at[i].set(True),
+            left=self._state["left"].at[i].set(0))
+
     def _apply_cancels(self) -> None:
-        """Chunk-boundary cancellation: freeze the slot's device state
-        (no fetch — two scalar updates ride host→device), retire it in
-        the backend (pages freed), and drop cancelled queue entries."""
+        """Chunk-boundary cancellation: freeze the slot's device state,
+        retire it in the backend (pages freed), and drop cancelled
+        queue entries."""
         now = time.perf_counter()
         for i, r in enumerate(self._slot_req):
             if r is not None and r.cancel_requested:
-                self._state = dict(
-                    self._state,
-                    done=self._state["done"].at[i].set(True),
-                    left=self._state["left"].at[i].set(0))
+                r.cancel_requested = False      # consumed exactly once
+                self._freeze_slot(i)
                 self._finish(r, i, RequestStatus.CANCELLED, now)
         for r in [r for r in self.queue if r.cancel_requested]:
+            r.cancel_requested = False
             self.queue.remove(r)
             self._finish(r, None, RequestStatus.CANCELLED, now)
 
     def _admit(self) -> None:
-        """Fill free slots from the queue (FIFO).  When EVERY slot is
-        free and the backend supports it, one batched wave prefill
-        replaces ``slots`` per-slot dispatches; otherwise per-slot
-        refill — live slots keep decoding from their positions.
-        Admission gated by the backend (paged: worst-case reservation;
-        head-of-line blocking keeps FIFO fairness)."""
+        """Fill free slots from the queue — highest priority first, FIFO
+        within a level (stable sort on submission uid; a preempted
+        victim keeps its uid, so it re-admits ahead of later
+        equal-priority arrivals).  When EVERY slot is free and the
+        backend supports it, one batched wave prefill replaces ``slots``
+        per-slot dispatches; otherwise per-slot refill.  Admission is
+        gated by the backend (paged: worst-case reservation); when the
+        head is blocked the scheduler preempts the lowest-priority
+        running slot strictly below the head's priority, else records an
+        admission wait (head-of-line blocking keeps FIFO fairness)."""
         scfg = self.scfg
-        wave = self._backend.wave_step() if self.queue \
-            and self.num_live == 0 else None
+        self.queue.sort(key=lambda r: (-r.priority, r.uid))
+        head = self.queue[:scfg.slots]
+        wave = self._backend.wave_step() if head and self.num_live == 0 \
+            and all(r.rows0 is None for r in head) else None
         if wave is not None:
-            take = self.queue[:scfg.slots]
-            del self.queue[:scfg.slots]
+            take = head
+            del self.queue[:len(take)]
             prompts = np.zeros((scfg.slots, scfg.prompt_pad), np.int32)
             budgets = np.zeros(scfg.slots, np.int32)
             valid = np.zeros(scfg.slots, bool)
@@ -555,8 +503,9 @@ class Engine:
                 valid[i] = True
                 self._temps[i] = (scfg.temperature if r.temperature is None
                                   else r.temperature)
-                self._backend.admit(i, len(r.prompt), r.max_new)
-                r.slot, r.status = i, RequestStatus.RUNNING
+                r.rows0 = self._backend.admit(i, len(r.prompt), r.max_new)
+                r.slot = i
+                r.set_status(RequestStatus.RUNNING)
                 self._slot_req[i] = r
             self._key, sk = jax.random.split(self._key)
             self._cache, self._state = wave(
@@ -565,22 +514,32 @@ class Engine:
                 jnp.asarray(self._temps), sk)
             self._stats["prefills"] += len(take)
             return
-        for i in range(scfg.slots):
-            if self._slot_req[i] is not None or not self.queue:
-                continue
+        while self.queue:
+            free = [i for i in range(scfg.slots)
+                    if self._slot_req[i] is None]
+            if not free:
+                break
             r = self.queue[0]
+            eff_len = len(r.prompt) + len(r.out)
+            rows = r.resume_rows or self._backend.prompt_rows(eff_len)
             # the padded rows are what the prefix index keys on — hand
             # them to admission so matching and COW planning happen in
             # the backend (layouts without an index ignore them)
-            padded = self._pad_prompt(
-                r, self._backend.prompt_rows(len(r.prompt)))
-            if not self._backend.can_admit(len(r.prompt), r.max_new,
-                                           tokens=padded[0]):
-                self._stats["admission_waits"] += 1
-                break
+            padded = self._pad_prompt(r, rows)
+            if not self._backend.can_admit(eff_len, r.remaining_new,
+                                           tokens=padded[0], rows=rows):
+                victim = self._victim_slot(r.priority)
+                if victim is None:
+                    self._stats["admission_waits"] += 1
+                    break
+                self._preempt(victim, time.perf_counter())
+                continue
             self.queue.pop(0)
-            rows = self._backend.admit(i, len(r.prompt), r.max_new,
-                                       tokens=padded[0])
+            i = free[0]
+            rows = self._backend.admit(i, eff_len, r.remaining_new,
+                                       tokens=padded[0], rows=rows)
+            if r.rows0 is None:
+                r.rows0 = rows
             start, cow = self._backend.prefill_plan(i)
             temp = (scfg.temperature if r.temperature is None
                     else r.temperature)
@@ -589,34 +548,14 @@ class Engine:
                 rows, start, cow)(
                 self.params, {"tokens": jnp.asarray(padded[:, start:])},
                 self._cache, self._state, jnp.asarray(i, jnp.int32),
-                jnp.asarray(r.max_new, jnp.int32),
+                jnp.asarray(r.remaining_new, jnp.int32),
                 jnp.asarray(temp, jnp.float32), sk,
                 *self._backend.prefill_args(i))
             self._temps[i] = temp
-            r.slot, r.status = i, RequestStatus.RUNNING
+            r.slot = i
+            r.set_status(RequestStatus.RUNNING)
             self._slot_req[i] = r
             self._stats["prefills"] += 1
-
-    def _run_chunk(self, loop, key, extra):
-        """Invoke one decode chunk and make the single device→host fetch
-        — the speculative loop's drafted/accepted counters ride in the
-        same transfer."""
-        if self.scfg.spec:
-            cache, state, tokens, emitted, dr, ac = loop(
-                self.params, self.draft_params, self._cache, self._state,
-                key, *extra)
-            blk, emit, done, dr, ac = _fetch(
-                (tokens, emitted, state["done"], dr, ac))
-            self._stats["drafted"] += int(dr)
-            self._stats["accepted"] += int(ac)
-        else:
-            cache, state, tokens, emitted = loop(
-                self.params, self._cache, self._state,
-                jnp.asarray(self._temps), key, *extra)
-            blk, emit, done = _fetch((tokens, emitted, state["done"]))
-        self._cache, self._state = cache, state
-        self.sync_count += 1
-        return blk, emit, done
 
     def _collect(self, blk, emit, done, dt: float) -> List[TokenEvent]:
         """Distribute one fetched token block in emission order, stamp
@@ -644,13 +583,17 @@ class Engine:
                 for r, idx in emitted]
 
     def step(self) -> List[TokenEvent]:
-        """One scheduler tick: cancellations → admission (+ prefill) →
-        one decode chunk → the single fetch.  Returns every token the
-        tick emitted, in emission order; an empty list means nothing is
-        live (queue empty or admission fully blocked)."""
+        """One scheduler tick: cancellations → deadlines → admission
+        (+ prefill, preempting lower-priority slots under pool
+        exhaustion) → one decode chunk → the single fetch → the numeric
+        guard.  Returns every token the tick emitted, in emission order;
+        an empty list means nothing is live (queue empty or admission
+        fully blocked).  Never raises on an injected/transient fault —
+        the affected requests end in a terminal status instead."""
         with self.mesh:
             self._ensure_device_state()
             self._apply_cancels()
+            self._apply_deadlines()
             self._admit()
             live = [i for i, r in enumerate(self._slot_req)
                     if r is not None]
@@ -659,9 +602,16 @@ class Engine:
             loop, extra = self._backend.begin_chunk(live)
             self._key, sk = jax.random.split(self._key)
             t0 = time.perf_counter()
-            blk, emit, done = self._run_chunk(loop, sk, extra)
+            fetched = self._run_chunk(live, loop, sk, extra)
             dt = time.perf_counter() - t0
-            events = self._collect(blk, emit, done, dt)
+            if fetched is None:         # unrecoverable fetch: the
+                now = time.perf_counter()   # chunk's tokens are lost
+                for i in live:
+                    self._quarantine(i, now)
+                events: List[TokenEvent] = []
+            else:
+                blk, emit = self._guard_block(fetched[0], fetched[1])
+                events = self._collect(blk, emit, fetched[2], dt)
             self._backend.end_chunk(
                 [i for i in live if self._slot_req[i] is not None])
         return events
@@ -670,10 +620,18 @@ class Engine:
 
     def run(self) -> List[Request]:
         """Serve until the queue drains; returns the finished-request
-        records (cumulative across calls, like the v1 ``Server``)."""
+        records (cumulative across calls, like the v1 ``Server``).
+        Tolerates a few fully-idle ticks before declaring the queue
+        permanently blocked — transient pool pressure (chaos injection,
+        a pin about to be released) clears within a tick or two."""
+        idle = 0
         while self.queue or self.num_live:
-            if not self.step() and not self.num_live:
-                break               # admission blocked with nothing live
+            if self.step() or self.num_live:
+                idle = 0
+                continue
+            idle += 1               # admission blocked with nothing live
+            if idle > 8:
+                break
         return self.finished
 
     def generate(self, prompts: Sequence[Any], *,

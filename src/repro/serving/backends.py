@@ -54,9 +54,12 @@ class CacheBackend(Protocol):
 
     def prompt_rows(self, prompt_len: int) -> int: ...
     def can_admit(self, prompt_len: int, max_new: int,
-                  tokens: Optional[np.ndarray] = None) -> bool: ...
+                  tokens: Optional[np.ndarray] = None,
+                  rows: Optional[int] = None) -> bool: ...
     def admit(self, slot: int, prompt_len: int, max_new: int,
-              tokens: Optional[np.ndarray] = None) -> int: ...
+              tokens: Optional[np.ndarray] = None,
+              rows: Optional[int] = None) -> int: ...
+    def clear_programs(self) -> None: ...
     def prefill_plan(self, slot: int) -> Tuple[int, bool]: ...
     def prefill_step(self, rows: int, start: int = 0,
                      cow: bool = False) -> Callable: ...
@@ -90,6 +93,14 @@ class _BackendBase:
         """(start row, needs-COW-copy) for the slot's pending prefill —
         (0, False) unless prefix sharing mapped resident pages."""
         return 0, False
+
+    def clear_programs(self) -> None:
+        """Drop every cached jitted program so the next chunk/prefill
+        re-traces — the engine's degraded mode re-resolves kernel
+        dispatch (now forced to ``ref``) through this."""
+        self._prefill_steps.clear()
+        self._decode_loops.clear()
+        self._wave = None
 
     def prefill_step(self, rows: int, start: int = 0,
                      cow: bool = False) -> Callable:
@@ -132,12 +143,16 @@ class MonoBackend(_BackendBase):
         return self.scfg.prompt_pad
 
     def can_admit(self, prompt_len: int, max_new: int,
-                  tokens: Optional[np.ndarray] = None) -> bool:
+                  tokens: Optional[np.ndarray] = None,
+                  rows: Optional[int] = None) -> bool:
         return True
 
     def admit(self, slot: int, prompt_len: int, max_new: int,
-              tokens: Optional[np.ndarray] = None) -> int:
-        return self.scfg.prompt_pad
+              tokens: Optional[np.ndarray] = None,
+              rows: Optional[int] = None) -> int:
+        # ``rows`` is a resumed request's exact prefill width (rows0 +
+        # emitted); fresh admissions use the uniform prompt_pad
+        return rows or self.scfg.prompt_pad
 
     def prefill_args(self, slot: int) -> Tuple:
         return ()
@@ -211,25 +226,27 @@ class PagedBackend(_BackendBase):
         return self.scfg.prompt_rows(prompt_len)
 
     def can_admit(self, prompt_len: int, max_new: int,
-                  tokens: Optional[np.ndarray] = None) -> bool:
-        need = self.scfg.request_pages(prompt_len, max_new)
+                  tokens: Optional[np.ndarray] = None,
+                  rows: Optional[int] = None) -> bool:
+        rows = rows or self.scfg.prompt_rows(prompt_len)
+        need = self.scfg.rows_pages(rows, max_new)
         if not self.prefix_on:
             return self.reserved + need <= self.scfg.pool_pages
         # shared hits shrink the private need; retained (refcount-zero)
         # pages are reclaimable on demand so only live ones count
         if tokens is not None:
-            rows = self.scfg.prompt_rows(prompt_len)
             nodes, _ = self.index.match(tokens, rows)
             need -= min(len(nodes), (rows - 1) // self.scfg.page_size)
         return (self.reserved + need + self.index.live_pages
                 <= self.scfg.pool_pages)
 
     def admit(self, slot: int, prompt_len: int, max_new: int,
-              tokens: Optional[np.ndarray] = None) -> int:
+              tokens: Optional[np.ndarray] = None,
+              rows: Optional[int] = None) -> int:
         scfg = self.scfg
         ps = scfg.page_size
-        rows = scfg.prompt_rows(prompt_len)
-        need = scfg.request_pages(prompt_len, max_new)
+        rows = rows or scfg.prompt_rows(prompt_len)
+        need = scfg.rows_pages(rows, max_new)
         self.slot_need[slot] = need
         self.slot_rows[slot] = rows
         self.ptab[slot] = 0
@@ -359,6 +376,10 @@ class PagedBackend(_BackendBase):
     def release_prefix(self, nodes: List[Any]) -> None:
         for nd in nodes:
             self.free_pages.extend(self.index.release(nd))
+
+    def clear_programs(self) -> None:
+        super().clear_programs()
+        self._prefix_fills.clear()
 
     def prefix_fill_step(self, rows: int) -> Callable:
         fn = self._prefix_fills.get(rows)

@@ -41,6 +41,11 @@ class ServeConfig:
     prefix_cache_pages: int = 0     # cap on *retained* (refcount-zero,
     #                                 unpinned) cached pages; 0 → keep
     #                                 all, reclaim only on pool pressure
+    # --- fault tolerance ---
+    max_queue: int = 0              # bounded admission FIFO: submissions
+    #                                 beyond this many queued requests are
+    #                                 REJECTED immediately (0 → unbounded,
+    #                                 the pre-PR-7 wait-forever behavior)
     # --- speculative decoding (spec_k > 0 switches the decode loop) ---
     spec_k: int = 0                 # tokens drafted per verify; 0 → off
     spec_draft: str = "self"        # draft params when none are passed:
@@ -92,8 +97,13 @@ class ServeConfig:
         freezes the slot) and < max_len (capacity freezes it).  The
         single source of the admission math — benchmarks size their
         demand-fitted pools through this too."""
-        rows = min(self.prompt_rows(prompt_len) + max_new, self.max_len)
-        return -(-rows // self.page_size)
+        return self.rows_pages(self.prompt_rows(prompt_len), max_new)
+
+    def rows_pages(self, rows: int, max_new: int) -> int:
+        """``request_pages`` at an *exact* prefill width — re-admission
+        after preemption prefills ``rows0 + emitted`` rows (no
+        re-bucketing, so the padded layout matches the first run)."""
+        return -(-min(rows + max_new, self.max_len) // self.page_size)
 
     def validate(self) -> None:
         """Raise ``ValueError`` on configurations the engine cannot
@@ -115,6 +125,10 @@ class ServeConfig:
             raise ValueError(
                 f"prefix_cache_pages must be >= 0, got "
                 f"{self.prefix_cache_pages}")
+        if self.max_queue < 0:
+            raise ValueError(
+                f"max_queue must be >= 0 (0 = unbounded), got "
+                f"{self.max_queue}")
         if self.spec:
             if self.prompt_pad + self.spec_k + 1 > self.max_len:
                 raise ValueError(

@@ -176,6 +176,15 @@ class PrefixIndex:
         victim.parent = None
         return victim.page
 
+    def iter_nodes(self):
+        """Every node in the trie — live and retained — depth-first.
+        ``engine.audit()`` walks this for page-id conservation."""
+        stack = list(self.children.values())
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(node.children.values())
+
     @property
     def retained_pages(self) -> int:
         return len(self.retained)

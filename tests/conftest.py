@@ -24,8 +24,21 @@ except ImportError:
     sys.modules["hypothesis.strategies"] = _mod.strategies
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Drop compiled executables between test modules.  The suite
+    compiles thousands of distinct program geometries; on the CPU
+    backend letting them all accumulate in one process eventually
+    segfaults inside XLA's compiler (deterministically, once the suite
+    grew past ~350 tests).  Per-module clearing bounds the resident
+    program count; callers re-jit transparently."""
+    yield
+    jax.clear_caches()
 
 
 def reference_decode(params, cfg, prompt, max_new, eos, prompt_pad, max_len):

@@ -2,7 +2,9 @@
 descriptor, the CPU fallback equals the ref numerics, and the autotune
 cache round-trips through its JSON file."""
 
+import dataclasses
 import json
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -184,6 +186,73 @@ class TestAutotuneCache:
         assert len(cache) == 0
         cache.put("k", {"bm": 128})
         assert dispatch.AutotuneCache(str(p)).get("k") == {"bm": 128}
+
+    def test_truncated_json_warns_once_and_rebuilds(self, tmp_path):
+        """A crash mid-write leaves a truncated file: the cache must
+        warn exactly once, start empty, and rebuild on the next put —
+        never raise into the serving path."""
+        p = tmp_path / "autotune.json"
+        p.write_text('{"k1": {"bm": 64, "us": 1.0}, "k2": {"bm"')
+        with pytest.warns(RuntimeWarning, match="autotune cache"):
+            cache = dispatch.AutotuneCache(str(p))
+            assert cache.get("k1") is None
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")      # no second warning
+            assert cache.get("k2") is None
+            cache.put("k3", {"bm": 128})
+        assert dispatch.AutotuneCache(str(p)).get("k3") == {"bm": 128}
+        assert json.load(open(p)) == {"k3": {"bm": 128}}
+
+    def test_wrong_shape_payload_salvages_dict_entries(self, tmp_path):
+        p = tmp_path / "autotune.json"
+        p.write_text('{"good": {"bm": 64}, "bad": 3}')
+        cache = dispatch.AutotuneCache(str(p))
+        with pytest.warns(RuntimeWarning):    # load is lazy: first read
+            assert cache.get("good") == {"bm": 64}
+        assert cache.get("bad") is None
+        p.write_text('[1, 2, 3]')               # valid JSON, wrong shape
+        with pytest.warns(RuntimeWarning):
+            assert dispatch.AutotuneCache(str(p)).get("x") is None
+
+
+class TestModeOverride:
+    """set_mode_override: the engine's degraded-mode lever — outranks
+    both the caller's impl and the REPRO_DISPATCH_MODE env."""
+
+    def test_override_beats_env_and_impl(self, packs, monkeypatch):
+        monkeypatch.setenv("REPRO_DISPATCH_MODE", "interpret")
+        prev = dispatch.set_mode_override("ref")
+        try:
+            assert prev is None
+            assert dispatch.mode_override() == "ref"
+            assert dispatch.resolve_mode("compiled") == "ref"
+            assert dispatch.select(packs["nm"], M=128,
+                                   impl="kernel").mode == "ref"
+        finally:
+            dispatch.set_mode_override(None)
+        assert dispatch.resolve_mode("compiled") == "interpret"
+
+    def test_override_validated(self):
+        with pytest.raises(ValueError):
+            dispatch.set_mode_override("bogus")
+
+    def test_raising_kernel_falls_back_to_ref(self, packs, monkeypatch):
+        """A sparse fast path that raises at run time degrades that call
+        to the jnp oracle with a warning — it never takes the caller
+        down (satellite of the engine's degraded mode)."""
+        real = dispatch._REGISTRY["nm_spmm"]
+
+        def boom(x, w, mode, blocks):
+            raise RuntimeError("tile explosion")
+        monkeypatch.setitem(
+            dispatch._REGISTRY, "nm_spmm",
+            dataclasses.replace(real, run=boom))
+        x = rand(21, (64, 256))
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            out = dispatch.sparse_matmul(x, packs["nm"], impl="kernel")
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.nm_spmm_ref(x, packs["nm"])),
+            rtol=2e-5, atol=1e-4)
 
 
 class TestPlan:

@@ -293,6 +293,47 @@ class TestCancel:
         h.cancel()
         assert h.status is RequestStatus.DONE
 
+    def test_double_cancel_is_idempotent(self, params):
+        """Cancelling a terminal handle is a no-op — in particular the
+        second cancel can never re-arm the flag and double-release the
+        slot's pages on a later tick (regression for the paged pool)."""
+        scfg = ServeConfig(slots=2, max_len=64, prompt_pad=8,
+                           max_new_tokens=32, decode_chunk=4, eos_token=-1,
+                           page_size=8)
+        eng = Engine(TINY, mesh11(), scfg, params)
+        h1 = eng.submit(PROMPTS[0])
+        h2 = eng.submit(PROMPTS[1])
+        eng.step()
+        h1.cancel()
+        eng.step()                      # cancel takes effect, slot retires
+        assert h1.status is RequestStatus.CANCELLED
+        assert not h1._req.cancel_requested or h1.done
+        h1.cancel()                     # terminal: must not re-arm
+        h1.cancel()
+        assert not h1._req.cancel_requested
+        eng.run()
+        assert h2.status is RequestStatus.DONE
+        # pool conserved: every page owned exactly once
+        assert sorted(eng._backend.free_pages) == \
+            list(range(1, scfg.pool_pages + 1))
+        eng.audit()
+
+    def test_cancel_after_finish_keeps_status_and_pages(self, params):
+        scfg = ServeConfig(slots=1, max_len=64, prompt_pad=8,
+                           max_new_tokens=4, decode_chunk=4, eos_token=-1,
+                           page_size=8)
+        eng = Engine(TINY, mesh11(), scfg, params)
+        h = eng.submit(PROMPTS[0])
+        eng.run()
+        assert h.status is RequestStatus.DONE
+        free_before = sorted(eng._backend.free_pages)
+        for _ in range(3):
+            h.cancel()
+            eng.step()
+        assert h.status is RequestStatus.DONE       # not CANCELLED
+        assert sorted(eng._backend.free_pages) == free_before
+        eng.audit()
+
 
 class TestSyncContract:
     def test_one_fetch_per_step(self, params, monkeypatch):
