@@ -59,6 +59,15 @@ reads both ≥ 1.5 — plus the engine's own ``prefix_hits`` /
 and warm-up suffixes are disjoint from the timed ones, so the timed run
 measures pinned-head sharing only.
 
+The **crash-restore row** (``crash-restore``) re-times the het-paged
+mix with the write-ahead request journal attached (``journal_tok_per_s``
+and ``journal_overhead_pct`` — the fsync-per-chunk-boundary price of
+crash safety, acceptance wants < 5%), then serves the same mix under the
+:class:`~repro.serving.supervisor.Supervisor` with an injected mid-run
+crash: ``tok_per_s`` is end-to-end throughput *through* the kill +
+restore, ``recovery_ms`` / ``load_ms`` / ``replay_ms`` the recovery
+latency breakdown (snapshot load, journal replay) recover_engine stamps.
+
 Shapes shrink under ``REPRO_BENCH_SMOKE=1`` (the CI smoke step) so one
 pass stays in seconds.
 """
@@ -523,6 +532,89 @@ def _spec_scenario(mesh, paged_tok_per_s: float) -> list:
     return rows
 
 
+# --- crash-restore scenario (WAL overhead + recovery latency) --------------
+# the heterogeneous mix served three ways: plain paged (re-timed for a
+# fair same-process A/B), paged + write-ahead journal (the fsync'd WAL
+# every chunk boundary pays for crash safety — acceptance wants < 5%
+# tok/s overhead), and supervised with an injected mid-run crash (the
+# row's headline: end-to-end tok/s *through* a kill + restore, plus the
+# recovery latency breakdown recover_engine stamps).
+CRASH_TICK = 2                      # monkey ticks before the injected kill
+
+
+def _crash_restore_scenario(mesh) -> list:
+    import dataclasses
+    import shutil
+    import tempfile
+    import warnings as _warnings
+
+    from repro.serving import ChaosConfig, ChaosMonkey, Supervisor
+
+    cfg, params = _model("dense")
+    rng = np.random.default_rng(1)
+    requests = [rng.integers(1, VOCAB, size=L).astype(np.int32)
+                for L in HET_LENS]
+    paged_scfg = dataclasses.replace(_het_scfg(),
+                                     num_pages=_het_pool_pages())
+    tmp = tempfile.mkdtemp(prefix="bench_crash_")
+    try:
+        # A/B: identical workload, only the WAL differs.  3 rounds per
+        # run average the per-tick fsync over enough chunks, and the
+        # pair is measured 3 times interleaved (median overhead) — a
+        # single pair is at the mercy of CPU frequency/cache drift on
+        # a run this short
+        reqs3 = requests * 3
+        pairs = []
+        for i in range(3):
+            base = _serve_chunked(cfg, mesh, params, HET_SLOTS, reqs3,
+                                  scfg=paged_scfg, warm_all=True,
+                                  warm_requests=requests, rounds=3)
+            jr_scfg = dataclasses.replace(
+                paged_scfg,
+                journal_path=os.path.join(tmp, f"wal{i}.jsonl"))
+            jr = _serve_chunked(cfg, mesh, params, HET_SLOTS, reqs3,
+                                scfg=jr_scfg, warm_all=True,
+                                warm_requests=requests, rounds=3)
+            pairs.append((base["tok_per_s"], jr["tok_per_s"]))
+        overhead = float(np.median(
+            [(b - j) / max(b, 1e-9) * 100.0 for b, j in pairs]))
+        jr_tps = float(np.median([j for _, j in pairs]))
+
+        # supervised kill-and-recover: same mix at a quarter of the
+        # decode chunk (so the run spans enough scheduler ticks that the
+        # kill lands mid-stream, with delivered prefixes to preserve),
+        # crash at CRASH_TICK, snapshots bounding the replay
+        sup_scfg = dataclasses.replace(paged_scfg,
+                                       decode_chunk=max(2, HET_CHUNK // 4))
+        sup = Supervisor(
+            cfg, mesh, sup_scfg, params,
+            journal_path=os.path.join(tmp, "sup_wal.jsonl"),
+            snapshot_dir=os.path.join(tmp, "snap"), snapshot_every=4)
+        ChaosMonkey(sup.engine, ChaosConfig(
+            seed=0, rate=0.0, crash_tick=CRASH_TICK)).attach()
+        for p in requests:
+            sup.submit(p, max_new=HET_MAX_NEW)
+        t0 = time.perf_counter()
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("ignore", RuntimeWarning)
+            done = sup.run()
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in done)
+        rec = sup.last_recovery
+        return [{
+            "config": "crash-restore", "slots": HET_SLOTS,
+            "tokens": toks,
+            "tok_per_s": round(toks / wall, 1),
+            "restarts": sup.restarts,
+            "recovery_ms": round(rec.get("total_ms", 0.0), 1),
+            "load_ms": round(rec.get("load_ms", 0.0), 1),
+            "replay_ms": round(rec.get("replay_ms", 0.0), 1),
+            "journal_tok_per_s": round(jr_tps, 1),
+            "journal_overhead_pct": round(overhead, 2)}]
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def run() -> dict:
     rng = np.random.default_rng(0)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
@@ -553,6 +645,7 @@ def run() -> dict:
     rows.extend(_spec_scenario(mesh, paged_tps))
     rows.extend(_shared_scenario(mesh))
     rows.extend(_preempt_scenario(mesh))
+    rows.extend(_crash_restore_scenario(mesh))
     return {"rows": rows, "decode_chunk": DECODE_CHUNK, "max_new": MAX_NEW,
             "het": {"lens": HET_LENS, "page_size": HET_PAGE,
                     "max_len": HET_MAX_LEN, "pool_pages": _het_pool_pages(),
@@ -561,6 +654,8 @@ def run() -> dict:
             "shared": {"heads": list(SH_HEADS), "suffix": SH_SUFFIX,
                        "requests": SH_REQS, "max_new": SH_MAX_NEW,
                        "page_size": HET_PAGE},
+            "crash": {"crash_tick": CRASH_TICK, "snapshot_every": 4,
+                      "max_new": HET_MAX_NEW},
             "preempt": {"slots": PR_SLOTS, "batch_len": PR_BATCH_LEN,
                         "batch_new": PR_BATCH_NEW,
                         "inter_len": PR_INTER_LEN,
@@ -578,7 +673,8 @@ def main(out=None) -> None:
     print("config,slots,tokens,tok_per_s,p50_ms,p95_ms,ttft_p50_ms,"
           "ttft_p95_ms,syncs,ref_tok_per_s,speedup")
     for r in out["rows"]:
-        if r["config"].startswith(("het-", "spec-", "shared-", "mixed-")):
+        if r["config"].startswith(("het-", "spec-", "shared-", "mixed-",
+                           "crash-")):
             continue
         print(f"{r['config']},{r['slots']},{r['tokens']},"
               f"{r['tok_per_s']},{r['p50_ms']},{r['p95_ms']},"
@@ -640,6 +736,19 @@ def main(out=None) -> None:
                   f"{r['base_tok_per_s']},{r['base_inter_ttft_p50_ms']},"
                   f"{r['base_inter_ttft_p95_ms']},"
                   f"{r['base_admission_waits']},{r['ttft_p95_speedup']}")
+    crash = [r for r in out["rows"] if r["config"].startswith("crash-")]
+    if crash:
+        cr = out.get("crash", {})
+        print(f"# crash-restore on the heterogeneous mix — WAL journaling "
+              f"overhead vs het-paged, plus a supervised kill at tick "
+              f"{cr.get('crash_tick')} restored from snapshot+journal")
+        print("config,slots,tokens,tok_per_s,restarts,recovery_ms,"
+              "load_ms,replay_ms,journal_tok_per_s,journal_overhead_pct")
+        for r in crash:
+            print(f"{r['config']},{r['slots']},{r['tokens']},"
+                  f"{r['tok_per_s']},{r['restarts']},{r['recovery_ms']},"
+                  f"{r['load_ms']},{r['replay_ms']},"
+                  f"{r['journal_tok_per_s']},{r['journal_overhead_pct']}")
     spec = [r for r in out["rows"] if r["config"].startswith("spec-")]
     if spec:
         print(f"# speculative serving on the heterogeneous mix — "

@@ -73,6 +73,27 @@ def main() -> int:
                     help="per-request deadline; requests still queued "
                          "or decoding past it finish TIMED_OUT at the "
                          "next chunk boundary (0 = none)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run the engine under the crash-safe "
+                         "supervisor: step() failures (including "
+                         "injected crashes) and watchdog-detected hangs "
+                         "tear the engine down and restore it from the "
+                         "journal + latest snapshot with bit-identical "
+                         "resume (requires --journal)")
+    ap.add_argument("--journal", default="",
+                    help="write-ahead request journal path (append-only "
+                         "JSONL, fsync'd at chunk boundaries); with "
+                         "--supervise it is what recovery replays")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="engine snapshot directory; with --supervise, "
+                         "snapshots bound how much journal replay a "
+                         "recovery pays")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot every N scheduler ticks (0 = never)")
+    ap.add_argument("--watchdog-ms", type=float, default=0.0,
+                    help="supervised watchdog: a step slower than this "
+                         "(past the post-start compile grace) counts as "
+                         "a hung engine and triggers restore (0 = off)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -85,7 +106,7 @@ def main() -> int:
     from repro import models as MZ
     from repro.checkpoint import restore_latest
     from repro.launch.mesh import make_elastic_mesh
-    from repro.serving import Engine, ServeConfig
+    from repro.serving import Engine, ServeConfig, Supervisor
 
     mod = C._module(args.arch)
     cfg = mod.reduced() if args.reduced else mod.config()
@@ -111,8 +132,18 @@ def main() -> int:
                        prompt_buckets=args.prompt_buckets,
                        prefix_cache=args.prefix_cache,
                        max_queue=args.max_queue,
-                       spec_k=spec_k, spec_draft=args.spec_draft)
-    server = Engine(cfg, mesh, scfg, params)
+                       spec_k=spec_k, spec_draft=args.spec_draft,
+                       journal_path=args.journal)
+    if args.supervise:
+        if not args.journal:
+            ap.error("--supervise needs --journal (recovery replays it)")
+        server = Supervisor(cfg, mesh, scfg, params,
+                            journal_path=args.journal,
+                            snapshot_dir=args.snapshot_dir,
+                            snapshot_every=args.snapshot_every,
+                            watchdog_ms=args.watchdog_ms)
+    else:
+        server = Engine(cfg, mesh, scfg, params)
 
     rng_np = np.random.default_rng(args.seed)
     handle = None
@@ -153,7 +184,14 @@ def main() -> int:
         "kernel_failures": stats.kernel_failures,
         "fetch_errors": stats.fetch_errors,
         "degraded": stats.degraded,
+        "degraded_recoveries": stats.degraded_recoveries,
     }
+    if args.supervise:
+        report.update({
+            "restarts": server.restarts,
+            "recovery_ms": round(
+                server.last_recovery.get("total_ms", 0.0), 1),
+        })
     if scfg.paged:
         report.update({
             "page_size": scfg.page_size,

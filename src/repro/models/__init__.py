@@ -118,7 +118,16 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Array],
     """Prompt → (last-position logits, filled cache)."""
     f = family(cfg)
     if f == "encdec":
-        return ED.encdec_prefill(params, cfg, batch["src"], batch["tokens"],
+        src = batch.get("src")
+        if src is None:
+            # serving: the Engine hands decoder tokens only — condition
+            # on a null (all-zeros) source sized to the cross cache's
+            # source axis, so the jitted prefill's cache shapes match
+            # the initialized cache exactly
+            src = jnp.zeros((batch["tokens"].shape[0],
+                             cache["cross"]["k"].shape[2], cfg.d_model),
+                            cache["cross"]["k"].dtype)
+        return ED.encdec_prefill(params, cfg, src, batch["tokens"],
                                  cache)
     if f == "hybrid":
         return HY.hybrid_prefill(params, cfg, batch["tokens"], cache)

@@ -12,9 +12,12 @@ only fires when the v1 surface is actually used.
 """
 
 from repro.serving.api import Engine, RequestHandle
-from repro.serving.chaos import (AuditError, ChaosConfig, ChaosMonkey,
-                                 audit_engine)
+from repro.serving.chaos import (AuditError, ChaosConfig, ChaosCrashError,
+                                 ChaosMonkey, audit_engine)
 from repro.serving.config import ServeConfig
+from repro.serving.journal import (Journal, Recovered, recover_engine,
+                                   snapshot_engine)
+from repro.serving.supervisor import Supervisor, SupervisorError
 from repro.serving.state import (TERMINAL_STATUSES, EngineStats, Request,
                                  RequestStatus, TokenEvent,
                                  init_decode_state, sample_token,
@@ -34,7 +37,9 @@ __all__ = [
     "Engine", "RequestHandle", "TokenEvent", "Request", "RequestStatus",
     "ServeConfig", "Server", "CacheBackend", "MonoBackend", "PagedBackend",
     "PrefixHandle", "PrefixIndex", "EngineStats", "TERMINAL_STATUSES",
-    "AuditError", "ChaosConfig", "ChaosMonkey", "audit_engine",
+    "AuditError", "ChaosConfig", "ChaosCrashError", "ChaosMonkey",
+    "audit_engine", "Journal", "Recovered", "recover_engine",
+    "snapshot_engine", "Supervisor", "SupervisorError",
     "init_decode_state", "sample_token", "sample_token_folded",
     "sample_token_slots", "build_decode_loop", "build_decode_step",
     "build_paged_decode_loop", "build_paged_prefill_slot_step",

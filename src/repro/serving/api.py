@@ -44,7 +44,6 @@ next chunk's block.  Greedy output is bit-identical to the pre-v2
 
 from __future__ import annotations
 
-import itertools
 import os
 import sys
 import time
@@ -63,6 +62,7 @@ from repro.models.config import ModelConfig
 from repro.serving.backends import CacheBackend, make_backend
 from repro.serving.config import ServeConfig
 from repro.serving.faults import FaultTolerance
+from repro.serving.journal import Journal, recover_engine, snapshot_engine
 from repro.serving.prefix import PrefixHandle
 from repro.serving.state import (TERMINAL_STATUSES, Request, RequestHandle,
                                  RequestStatus, TokenEvent, _device_fetch,
@@ -152,7 +152,8 @@ class Engine(FaultTolerance):
         self.params = params
         self.queue: List[Request] = []
         self.finished: List[Request] = []
-        self._uid = itertools.count()
+        self._uid_next = 0
+        self._tick = 0                  # completed scheduler ticks
         self._key = jax.random.key(scfg.seed)
         self.sync_count = 0
         self._stats: Dict[str, Any] = _fresh_stats()
@@ -207,8 +208,16 @@ class Engine(FaultTolerance):
         # instance attributes so the chaos harness (serving.chaos) can
         # wrap them per engine without monkeypatching modules
         self.degraded = False
+        self._clean_chunks = 0          # consecutive fault-free chunks
         self._device_fetch = _fetch
         self._chaos = None
+        # --- crash safety: pinned prefixes by pid + the WAL ------------
+        self._pins: Dict[int, PrefixHandle] = {}
+        self._pin_next = 0
+        self.journal: Optional[Journal] = None
+        if scfg.journal_path:
+            self.journal = Journal(scfg.journal_path)
+            self.journal.log_config(scfg)
         if os.environ.get("REPRO_CHAOS_SEED"):
             from repro.serving.chaos import ChaosConfig, ChaosMonkey
             ChaosMonkey(self, ChaosConfig.from_env()).attach()
@@ -317,10 +326,20 @@ class Engine(FaultTolerance):
                 self._cache = fill(self.params,
                                    {"tokens": jnp.asarray(arr[None])},
                                    self._cache, jnp.asarray(page_row))
-        return PrefixHandle(self, arr.copy(), nodes)
+        h = PrefixHandle(self, arr.copy(), nodes)
+        h._pid = self._pin_next
+        self._pin_next += 1
+        self._pins[h._pid] = h
+        if self.journal is not None:
+            self.journal.log_pin(h._pid, arr)
+        return h
 
     def _release_prefix(self, handle: PrefixHandle) -> None:
         self._backend.release_prefix(handle._nodes)
+        if handle._pid is not None:
+            self._pins.pop(handle._pid, None)
+            if self.journal is not None:
+                self.journal.log_unpin(handle._pid)
 
     def submit(self, prompt: Union[Sequence[int], np.ndarray], *,
                max_new: Optional[int] = None,
@@ -388,15 +407,18 @@ class Engine(FaultTolerance):
                 raise ValueError(
                     f"request needs {need} pages but the pool only has "
                     f"{scfg.pool_pages} — raise num_pages")
-        req = Request(uid=next(self._uid), prompt=arr, max_new=max_new,
+        req = Request(uid=self._uid_next, prompt=arr, max_new=max_new,
                       temperature=temperature, stream=stream,
                       priority=int(priority), deadline_ms=deadline_ms)
+        self._uid_next += 1
         if scfg.max_queue and len(self.queue) >= scfg.max_queue:
             self._stats["rejections"] += 1
             self._finish(req, None, RequestStatus.REJECTED,
                          time.perf_counter())
-            return RequestHandle(self, req)
-        self.queue.append(req)
+        else:
+            self.queue.append(req)
+        if self.journal is not None:    # durable before the handle is
+            self.journal.log_submit(req)    # returned to the caller
         return RequestHandle(self, req)
 
     def cancel(self, handle: Union[RequestHandle, Request, int]) -> None:
@@ -590,6 +612,7 @@ class Engine(FaultTolerance):
         an empty list means nothing is live (queue empty or admission
         fully blocked).  Never raises on an injected/transient fault —
         the affected requests end in a terminal status instead."""
+        events: List[TokenEvent] = []
         with self.mesh:
             self._ensure_device_state()
             self._apply_cancels()
@@ -597,24 +620,51 @@ class Engine(FaultTolerance):
             self._admit()
             live = [i for i, r in enumerate(self._slot_req)
                     if r is not None]
-            if not live:
-                return []
-            loop, extra = self._backend.begin_chunk(live)
-            self._key, sk = jax.random.split(self._key)
-            t0 = time.perf_counter()
-            fetched = self._run_chunk(live, loop, sk, extra)
-            dt = time.perf_counter() - t0
-            if fetched is None:         # unrecoverable fetch: the
-                now = time.perf_counter()   # chunk's tokens are lost
-                for i in live:
-                    self._quarantine(i, now)
-                events: List[TokenEvent] = []
-            else:
-                blk, emit = self._guard_block(fetched[0], fetched[1])
-                events = self._collect(blk, emit, fetched[2], dt)
-            self._backend.end_chunk(
-                [i for i in live if self._slot_req[i] is not None])
+            if live:
+                loop, extra = self._backend.begin_chunk(live)
+                self._key, sk = jax.random.split(self._key)
+                t0 = time.perf_counter()
+                f0 = self._fault_count()
+                fetched = self._run_chunk(live, loop, sk, extra)
+                dt = time.perf_counter() - t0
+                if fetched is None:     # unrecoverable fetch: the
+                    now = time.perf_counter()  # chunk's tokens are lost
+                    for i in live:
+                        self._quarantine(i, now)
+                else:
+                    blk, emit = self._guard_block(fetched[0], fetched[1])
+                    events = self._collect(blk, emit, fetched[2], dt)
+                self._note_chunk_health(self._fault_count() != f0)
+                self._backend.end_chunk(
+                    [i for i in live if self._slot_req[i] is not None])
+        self._tick += 1
+        if self.journal is not None:    # the chunk-boundary fsync runs
+            self.journal.record_tick(self, events)  # BEFORE delivery
         return events
+
+    # --- crash safety -------------------------------------------------
+
+    def snapshot(self, directory: str) -> str:
+        """One atomic, digest-verified checkpoint of the scheduler state
+        (config, queue + slot occupancy, pins, stats, PRNG key) through
+        :mod:`repro.checkpoint.store`; returns the step directory.  See
+        :func:`repro.serving.journal.snapshot_engine`."""
+        return snapshot_engine(self, directory)
+
+    @classmethod
+    def restore(cls, cfg: ModelConfig, mesh: Mesh, params: Any, *,
+                scfg: Optional[ServeConfig] = None,
+                draft_params: Any = None,
+                journal_path: Optional[str] = None,
+                snapshot_dir: Optional[str] = None):
+        """Fresh engine + snapshot/journal replay; non-terminal requests
+        are re-queued for bit-identical resume.  Returns the
+        :class:`~repro.serving.journal.Recovered` bundle (``.engine``,
+        ``.handles``, ``.prefixes``, ``.timings``)."""
+        return recover_engine(cfg, mesh, params, scfg=scfg,
+                              draft_params=draft_params,
+                              journal_path=journal_path,
+                              snapshot_dir=snapshot_dir)
 
     # --- convenience wrappers -----------------------------------------
 

@@ -17,9 +17,20 @@ schedule:
     grows without taking real pages) for a few ticks, forcing admission
     waits and priority preemption without ever starving a running
     slot's lazy allocation.
+  * **crash** — the fetch raises :class:`ChaosCrashError`, a
+    ``BaseException`` no engine guard catches: it kills ``step()``
+    mid-tick like a SIGKILL, *after* the decode chunk consumed its
+    donated buffers and *before* the journal's chunk-boundary fsync —
+    the worst-case crash point the recovery layer must survive.  Armed
+    by rate or pinned to one tick (``crash_tick`` /
+    ``REPRO_CHAOS_CRASH_TICK``); sticky until a fetch consumes it.
+  * **hang** — the device wedges: once triggered (``hang_rate`` /
+    ``hang_tick``), EVERY subsequent fetch stalls ``hang_s`` seconds,
+    so step wall time stays degenerate until the supervisor's watchdog
+    trips.
 
 Determinism: every tick consumes exactly the same number of RNG draws
-(four uniforms + one slot index) regardless of engine state, so the
+(six uniforms + one slot index) regardless of engine state, so the
 fault schedule is a pure function of ``(seed, rate, tick)`` — two runs
 with the same seed and the same submissions see identical faults and
 reach identical final statuses.  Enable on any engine via the
@@ -37,7 +48,8 @@ or programmatically::
 :func:`audit_engine` (also reachable as ``engine.audit()``) checks the
 structural invariants — page-id conservation across free list, slot
 tables and the prefix trie; reservation accounting; request
-state-machine legality — and raises :class:`AuditError` on violation.
+state-machine legality; journal/engine consistency when a write-ahead
+journal is attached — and raises :class:`AuditError` on violation.
 Under chaos it runs after every step.
 """
 
@@ -70,6 +82,15 @@ class ChaosKernelError(ChaosError):
     """Injected compiled-dispatch failure."""
 
 
+class ChaosCrashError(BaseException):
+    """Injected mid-tick process death.  Deliberately NOT an
+    ``Exception`` (and not a :class:`ChaosError`): every in-engine
+    guard — fetch retry, degraded-mode dispatch retry — catches
+    ``Exception``, and a crash must defeat them all and propagate out
+    of ``step()`` exactly like a kill signal.  Only the supervisor
+    catches it."""
+
+
 @dataclasses.dataclass(frozen=True)
 class ChaosConfig:
     """Injection knobs.  Per-site rates default to the global ``rate``;
@@ -85,6 +106,13 @@ class ChaosConfig:
     pressure_pages: int = 2         # phantom pages seized per event
     pressure_ticks: int = 2         # ticks a seizure is held
     audit_every_step: bool = True
+    # crash/hang do NOT inherit the global rate (a background chaos env
+    # should not randomly kill engines): explicit rate or pinned tick
+    crash_rate: float = 0.0
+    hang_rate: float = 0.0
+    crash_tick: Optional[int] = None  # kill exactly this monkey tick
+    hang_tick: Optional[int] = None   # wedge the device at this tick
+    hang_s: float = 0.05            # per-fetch stall once wedged
 
     def of(self, site: str) -> float:
         v = getattr(self, f"{site}_rate")
@@ -92,10 +120,17 @@ class ChaosConfig:
 
     @classmethod
     def from_env(cls) -> "ChaosConfig":
-        """Build from ``REPRO_CHAOS_SEED`` / ``REPRO_CHAOS_RATE`` — the
-        engine auto-attaches a monkey when the seed variable is set."""
+        """Build from ``REPRO_CHAOS_SEED`` / ``REPRO_CHAOS_RATE`` (plus
+        the optional ``REPRO_CHAOS_CRASH_TICK`` / ``_HANG_TICK`` pins) —
+        the engine auto-attaches a monkey when the seed variable is
+        set."""
+        def tick(name):
+            v = os.environ.get(name)
+            return int(v) if v else None
         return cls(seed=int(os.environ["REPRO_CHAOS_SEED"]),
-                   rate=float(os.environ.get("REPRO_CHAOS_RATE", "0.01")))
+                   rate=float(os.environ.get("REPRO_CHAOS_RATE", "0.01")),
+                   crash_tick=tick("REPRO_CHAOS_CRASH_TICK"),
+                   hang_tick=tick("REPRO_CHAOS_HANG_TICK"))
 
 
 class ChaosMonkey:
@@ -117,6 +152,8 @@ class ChaosMonkey:
         self._pending_delay = False
         self._pending_nan: Optional[int] = None
         self._pending_kernel = False
+        self._pending_crash = False     # sticky until a fetch consumes it
+        self._hung = False              # sticky forever: a wedged device
         self._attached = False
         self._orig: Dict[str, Any] = {}
 
@@ -181,11 +218,18 @@ class ChaosMonkey:
     # --- the wrapped seams --------------------------------------------
 
     def _arm(self) -> None:
-        """One tick's fault draws — ALWAYS four uniforms and one slot
+        """One tick's fault draws — ALWAYS six uniforms and one slot
         index, so the schedule never depends on engine state."""
         cfg = self.cfg
-        u = self.rng.uniform(size=4)
+        u = self.rng.uniform(size=6)
         slot = int(self.rng.integers(0, self.engine.scfg.slots))
+        if u[4] < cfg.crash_rate or self.tick == cfg.crash_tick:
+            self._pending_crash = True
+            self.schedule.append((self.tick, "crash", None))
+        if not self._hung and (u[5] < cfg.hang_rate
+                               or self.tick == cfg.hang_tick):
+            self._hung = True
+            self.schedule.append((self.tick, "hang", None))
         if u[0] < cfg.of("kernel"):
             self._pending_kernel = True
             self.schedule.append((self.tick, "kernel", None))
@@ -211,7 +255,9 @@ class ChaosMonkey:
         self._arm()
         events = self._orig["step"]()
         # a tick's unconsumed faults don't leak into the next one (an
-        # idle tick makes no fetch/dispatch)
+        # idle tick makes no fetch/dispatch); crash/hang are the
+        # exception — an armed crash stays armed until a fetch consumes
+        # it, and a wedged device stays wedged
         self._pending_drop = self._pending_delay = False
         self._pending_nan = None
         self._pending_kernel = False
@@ -221,6 +267,14 @@ class ChaosMonkey:
         return events
 
     def _fetch(self, tree: Any) -> Any:
+        if self._pending_crash:
+            # the decode chunk already consumed its donated buffers and
+            # the journal has NOT fsync'd this tick — maximum damage
+            self._pending_crash = False
+            raise ChaosCrashError(
+                f"injected mid-tick crash @tick {self.tick}")
+        if self._hung:
+            time.sleep(self.cfg.hang_s)
         if self._pending_drop:
             self._pending_drop = False
             raise ChaosFetchError(f"injected fetch drop @tick {self.tick}")
@@ -341,10 +395,51 @@ def _audit_pages(engine: Any) -> Dict[str, int]:
                                if b.prefix_on else 0)}
 
 
+def _audit_journal(engine: Any) -> Dict[str, int]:
+    """Journal/engine consistency (only when a WAL is attached): the
+    journal's in-memory mirror — built by the same ``_apply`` path a
+    replay uses — must agree with the engine at every chunk boundary.
+    The mirror may trail the engine by an unflushed chunk but may never
+    be AHEAD of it (a journal that replays tokens the engine never
+    emitted would duplicate them after recovery)."""
+    j = getattr(engine, "journal", None)
+    if j is None:
+        return {}
+    st = j.state
+    fin = {r.uid: r for r in engine.finished}
+    for i, r in enumerate(engine._slot_req):
+        if r is not None and r.uid not in st.reqs:
+            _fail(f"slot {i} runs request {r.uid} the journal never saw")
+    for uid, jr in st.reqs.items():
+        r = None
+        for cand in engine.queue + engine._slot_req:
+            if cand is not None and cand.uid == uid:
+                r = cand
+                break
+        r = r or fin.get(uid)
+        if r is None:
+            if jr.status not in {s.value for s in TERMINAL_STATUSES}:
+                _fail(f"journal holds non-terminal request {uid} the "
+                      "engine does not know")
+            continue
+        if len(jr.out) > len(r.out) \
+                or jr.out != r.out[:len(jr.out)]:
+            _fail(f"journal is ahead of engine for request {uid}: "
+                  f"journal={jr.out} engine={r.out}")
+        if jr.rows0 is not None and r.rows0 is not None \
+                and jr.rows0 != r.rows0:
+            _fail(f"request {uid} admit width diverged: journal rows0="
+                  f"{jr.rows0}, engine rows0={r.rows0}")
+    return {"journaled": len(st.reqs),
+            "journal_tick": st.tick,
+            "journal_pins": len(st.pins)}
+
+
 def audit_engine(engine: Any) -> Dict[str, Any]:
     """Check every structural invariant the serving stack promises —
     see the module docstring.  Returns a small report dict; raises
     :class:`AuditError` naming the first violation."""
     report = _audit_requests(engine)
     report.update(_audit_pages(engine))
+    report.update(_audit_journal(engine))
     return report

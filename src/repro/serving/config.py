@@ -46,6 +46,15 @@ class ServeConfig:
     #                                 beyond this many queued requests are
     #                                 REJECTED immediately (0 → unbounded,
     #                                 the pre-PR-7 wait-forever behavior)
+    degraded_recover_chunks: int = 8  # consecutive fault-free chunks
+    #                                 before a degraded engine clears the
+    #                                 ref-dispatch override and re-traces
+    #                                 its compiled programs (0 → degraded
+    #                                 mode stays one-way)
+    # --- crash safety ---
+    journal_path: str = ""          # write-ahead request journal (append-
+    #                                 only JSONL, fsync'd at chunk
+    #                                 boundaries); "" → journaling off
     # --- speculative decoding (spec_k > 0 switches the decode loop) ---
     spec_k: int = 0                 # tokens drafted per verify; 0 → off
     spec_draft: str = "self"        # draft params when none are passed:
@@ -129,6 +138,10 @@ class ServeConfig:
             raise ValueError(
                 f"max_queue must be >= 0 (0 = unbounded), got "
                 f"{self.max_queue}")
+        if self.degraded_recover_chunks < 0:
+            raise ValueError(
+                f"degraded_recover_chunks must be >= 0 (0 = never "
+                f"recover), got {self.degraded_recover_chunks}")
         if self.spec:
             if self.prompt_pad + self.spec_k + 1 > self.max_len:
                 raise ValueError(

@@ -226,10 +226,41 @@ class FaultTolerance:
         if self.degraded:
             return
         self.degraded = True
+        self._clean_chunks = 0
         warnings.warn(
             f"engine entering degraded (ref-dispatch) mode: {reason}",
             RuntimeWarning, stacklevel=2)
         dispatch.set_mode_override("ref")
+        self._backend.clear_programs()
+
+    def _fault_count(self) -> int:
+        """Monotone tally of every fault class a chunk can hit — the
+        before/after delta tells ``step()`` whether a chunk was clean."""
+        return (self._stats["numeric_faults"]
+                + self._stats["kernel_failures"]
+                + self._stats["fetch_errors"])
+
+    def _note_chunk_health(self, had_fault: bool) -> None:
+        """Degraded-mode recovery: after ``degraded_recover_chunks``
+        consecutive fault-free chunks, clear the ref-dispatch override
+        and re-trace back onto the compiled plans (counted in
+        ``degraded_recoveries``).  A fault during probation resets the
+        streak; ``degraded_recover_chunks=0`` keeps PR 7's one-way
+        behavior."""
+        if not self.degraded or not self.scfg.degraded_recover_chunks:
+            return
+        self._clean_chunks = 0 if had_fault else self._clean_chunks + 1
+        if self._clean_chunks < self.scfg.degraded_recover_chunks:
+            return
+        self.degraded = False
+        self._clean_chunks = 0
+        self._stats["degraded_recoveries"] += 1
+        warnings.warn(
+            "engine leaving degraded mode: "
+            f"{self.scfg.degraded_recover_chunks} consecutive clean "
+            "chunks — re-tracing on the compiled dispatch plans",
+            RuntimeWarning, stacklevel=2)
+        dispatch.set_mode_override(None)
         self._backend.clear_programs()
 
     # --- invariants ---------------------------------------------------

@@ -212,6 +212,7 @@ class PrefixHandle:
         self._tokens = tokens
         self._nodes = nodes
         self._released = False
+        self._pid = None            # pin id in the engine's WAL/registry
 
     @property
     def tokens(self) -> np.ndarray:

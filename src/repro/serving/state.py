@@ -146,7 +146,8 @@ def _fresh_stats() -> Dict[str, Any]:
             "drafted": 0, "accepted": 0,
             "prefix_hits": 0, "shared_pages": 0, "cow_copies": 0,
             "timeouts": 0, "rejections": 0, "preemptions": 0,
-            "numeric_faults": 0, "kernel_failures": 0, "fetch_errors": 0}
+            "numeric_faults": 0, "kernel_failures": 0, "fetch_errors": 0,
+            "degraded_recoveries": 0, "restarts": 0}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +183,9 @@ class EngineStats:
     kernel_failures: int = 0        # decode dispatch raised, ref retry
     fetch_errors: int = 0           # device→host fetch attempts that raised
     degraded: bool = False          # engine re-planned on ref dispatch
+    # --- crash safety (PR 8) -------------------------------------------
+    degraded_recoveries: int = 0    # degraded → compiled re-trace events
+    restarts: int = 0               # supervised crash/hang restorations
 
 
 def init_decode_state(slots: int) -> Dict[str, Array]:
@@ -290,7 +294,9 @@ class _StatsAccessor:
             numeric_faults=d["numeric_faults"],
             kernel_failures=d["kernel_failures"],
             fetch_errors=d["fetch_errors"],
-            degraded=bool(getattr(e, "degraded", False)))
+            degraded=bool(getattr(e, "degraded", False)),
+            degraded_recoveries=d["degraded_recoveries"],
+            restarts=d["restarts"])
 
     def __getitem__(self, key: str) -> Any:
         warnings.warn(

@@ -1,0 +1,239 @@
+"""Supervised serving: watchdog, teardown, restore, handle re-binding.
+
+:class:`Supervisor` wraps one :class:`~repro.serving.api.Engine` behind
+the same stepping surface (``submit`` / ``step`` / ``run`` / ``cancel``
+/ ``register_prefix`` / ``stats`` / ``audit``) and keeps requests alive
+across engine death:
+
+  * **crash** — ``step()`` raising *anything* (including
+    :class:`~repro.serving.chaos.ChaosCrashError`, the injected
+    ``BaseException`` that models a mid-tick SIGKILL) is caught here and
+    only here.  The dead engine is torn down and a fresh one is
+    restored from the latest snapshot plus the journal tail via
+    :func:`~repro.serving.journal.recover_engine`.
+  * **hang** — a watchdog measures each step's wall time; once past the
+    post-(re)start grace window (the first steps pay compilation), a
+    step slower than ``watchdog_ms`` means a wedged device and triggers
+    the same teardown + restore.
+  * **re-binding** — every :class:`~repro.serving.state.RequestHandle`
+    this supervisor issued keeps working across the restart: its
+    ``_req`` is swapped for the recovered record (same uid, same
+    emitted-token list, so a mid-iteration ``for tok in handle:`` log
+    continues exactly where it stopped — no duplicated, no dropped
+    tokens), and pinned :class:`~repro.serving.prefix.PrefixHandle`\\ s
+    are re-pointed at their re-registered (re-prefilled) pages.
+
+Handles issued by the supervisor drive ``supervisor.step()`` when
+iterated (the supervisor duck-types the engine surface a handle uses),
+so even a blocking ``handle.result()`` survives a crash mid-stream.
+
+Periodic snapshots (``snapshot_every`` ticks, into ``snapshot_dir``)
+bound how much journal replay a recovery pays; with no snapshot dir the
+journal alone recovers everything (slower, equally exact).  A restart
+storm is capped by ``max_restarts`` — past it the supervisor raises
+:class:`SupervisorError` instead of looping forever on a poisoned
+state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.kernels import dispatch
+from repro.models.config import ModelConfig
+from repro.serving.api import Engine
+from repro.serving.chaos import ChaosCrashError
+from repro.serving.config import ServeConfig
+from repro.serving.journal import recover_engine
+from repro.serving.prefix import PrefixHandle
+from repro.serving.state import Request, RequestHandle
+
+__all__ = ["Supervisor", "SupervisorError"]
+
+#: steps after a (re)start during which the watchdog holds fire — the
+#: first ticks pay jit compilation and would false-trip any sane budget
+_GRACE_STEPS = 2
+
+
+class SupervisorError(RuntimeError):
+    """The engine died more than ``max_restarts`` times — the fault is
+    not transient and supervised restart cannot mask it."""
+
+
+class Supervisor:
+    """Crash-safe facade over one engine (see the module docstring)."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                 params: Any, draft_params: Any = None, *,
+                 journal_path: str, snapshot_dir: Optional[str] = None,
+                 watchdog_ms: float = 0.0, snapshot_every: int = 0,
+                 max_restarts: int = 8):
+        if not journal_path:
+            raise ValueError("the supervisor needs a journal_path — "
+                             "recovery without a WAL cannot preserve "
+                             "delivered tokens")
+        self.cfg, self.mesh, self.params = cfg, mesh, params
+        self.draft_params = draft_params
+        self.scfg = dataclasses.replace(scfg, journal_path=journal_path)
+        self.journal_path = journal_path
+        self.snapshot_dir = snapshot_dir
+        self.watchdog_ms = watchdog_ms
+        self.snapshot_every = snapshot_every
+        self.max_restarts = max_restarts
+        self.restarts = 0
+        self.last_recovery: Dict[str, float] = {}
+        self._handles: Dict[int, RequestHandle] = {}
+        self._prefixes: Dict[int, PrefixHandle] = {}
+        self._grace = _GRACE_STEPS
+        self._last_snap = -1
+        self.engine = Engine(cfg, mesh, self.scfg, params, draft_params)
+
+    # --- the engine surface handles drive -----------------------------
+
+    @property
+    def num_live(self) -> int:
+        return self.engine.num_live
+
+    @property
+    def num_queued(self) -> int:
+        return self.engine.num_queued
+
+    @property
+    def queue(self) -> List[Request]:
+        return self.engine.queue
+
+    @property
+    def finished(self) -> List[Request]:
+        return self.engine.finished
+
+    def stats(self):
+        return self.engine.stats()
+
+    def ttfts_s(self) -> List[float]:
+        return self.engine.ttfts_s()
+
+    def audit(self) -> Dict[str, Any]:
+        return self.engine.audit()
+
+    def cancel(self, handle) -> None:
+        self.engine.cancel(handle)
+
+    def submit(self, prompt: Union[Sequence[int], np.ndarray], **kw
+               ) -> RequestHandle:
+        """``Engine.submit``, with the handle bound to the *supervisor*:
+        iterating it drives supervised steps, so the stream survives a
+        crash mid-iteration."""
+        h = self.engine.submit(prompt, **kw)
+        h._engine = self
+        self._handles[h.uid] = h
+        return h
+
+    def register_prefix(self, tokens) -> PrefixHandle:
+        h = self.engine.register_prefix(tokens)
+        self._prefixes[h._pid] = h
+        return h
+
+    def snapshot(self) -> Optional[str]:
+        """Write a snapshot now (also called every ``snapshot_every``
+        ticks from :meth:`step`)."""
+        if not self.snapshot_dir:
+            return None
+        self._last_snap = self.engine._tick
+        return self.engine.snapshot(self.snapshot_dir)
+
+    # --- supervised stepping ------------------------------------------
+
+    def step(self) -> List[Any]:
+        """One supervised tick: periodic snapshot, then the engine's
+        ``step()`` under the crash guard and the watchdog.  A tick that
+        triggers recovery returns ``[]`` — the crashed chunk's tokens
+        were either journaled (and already live in the recovered
+        requests' ``out``) or never emitted; either way the streams
+        resume without loss or duplication."""
+        eng = self.engine
+        if (self.snapshot_every and self.snapshot_dir and eng._tick > 0
+                and eng._tick % self.snapshot_every == 0
+                and eng._tick != self._last_snap):
+            self.snapshot()
+        t0 = time.perf_counter()
+        try:
+            events = eng.step()
+        except ChaosCrashError as e:    # BaseException: the "SIGKILL"
+            return self._restart(f"engine died mid-tick: {e!r}")
+        except Exception as e:
+            return self._restart(f"step() raised: {e!r}")
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        if self._grace > 0:
+            self._grace -= 1            # compilation amnesty
+        elif self.watchdog_ms and dt_ms > self.watchdog_ms:
+            return self._restart(
+                f"watchdog: step took {dt_ms:.0f} ms "
+                f"(budget {self.watchdog_ms:g} ms) — engine wedged")
+        return events
+
+    def run(self) -> List[Request]:
+        """Serve until the queue drains (the supervised analogue of
+        ``Engine.run``)."""
+        idle = 0
+        while self.engine.queue or self.engine.num_live:
+            if self.step() or self.engine.num_live:
+                idle = 0
+                continue
+            idle += 1
+            if idle > 8 + self.restarts:
+                break
+        return self.engine.finished
+
+    # --- teardown + restore -------------------------------------------
+
+    def _restart(self, reason: str) -> List[Any]:
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            raise SupervisorError(
+                f"engine died {self.restarts} times (cap "
+                f"{self.max_restarts}); last failure: {reason}")
+        warnings.warn(f"supervisor restarting engine: {reason}",
+                      RuntimeWarning, stacklevel=3)
+        t0 = time.perf_counter()
+        old = self.engine
+        # teardown: the chaos monkey dies with the process it killed,
+        # the old journal handle is closed (its file carries on), and a
+        # degraded process's dispatch override does not leak into the
+        # fresh one
+        if old._chaos is not None:
+            old._chaos.detach()
+        if old.journal is not None:
+            old.journal.close()
+        dispatch.set_mode_override(None)
+        rec = recover_engine(self.cfg, self.mesh, self.params,
+                             scfg=self.scfg,
+                             draft_params=self.draft_params,
+                             journal_path=self.journal_path,
+                             snapshot_dir=self.snapshot_dir)
+        eng = rec.engine
+        eng._stats["restarts"] = self.restarts
+        # re-bind live handles: same handle object, recovered record
+        for uid, h in self._handles.items():
+            nh = rec.handles.get(uid)
+            if nh is not None:          # terminal-before-snapshot uids
+                h._req = nh._req        # keep their old (final) record
+            h._engine = self
+        for pid, h in self._prefixes.items():
+            nh = rec.prefixes.get(pid)
+            if nh is None:              # released (unpinned) pre-crash
+                continue
+            h._nodes = nh._nodes
+            h._engine = eng
+            eng._pins[pid] = h          # registry keeps caller's object
+        self.engine = eng
+        self._grace = _GRACE_STEPS
+        self.last_recovery = dict(
+            rec.timings,
+            total_ms=(time.perf_counter() - t0) * 1e3)
+        return []

@@ -12,7 +12,7 @@ import pytest
 from conftest import reference_decode
 from repro import models as MZ
 from repro.kernels import dispatch
-from repro.models.config import ModelConfig
+from repro.models.config import LayerKind, ModelConfig
 from repro.serving import (TERMINAL_STATUSES, ChaosConfig, ChaosMonkey,
                            Engine, RequestStatus, ServeConfig)
 from repro.serving.chaos import AuditError, audit_engine
@@ -346,4 +346,207 @@ class TestAdmissionFairness:
         assert hi._req.first_token_s <= min(
             h._req.first_token_s for h in lo)
         mk.detach()
+        audit_engine(eng)
+
+
+class TestDeadlineClock:
+    """Satellite (PR 8): ``deadline_ms`` measures from the ORIGINAL
+    arrival — neither preemption nor resumption restarts the clock, so
+    a preempted-then-resumed request times out exactly when an
+    uninterrupted one would."""
+
+    def _preempt(self, eng, lo, hi_kw):
+        """Step until pool pressure evicts ``lo`` for the new arrival."""
+        hi = eng.submit(PROMPT_HI, priority=5, **hi_kw)
+        for _ in range(20):
+            if lo._req.preempts:
+                break
+            eng.step()
+        assert lo._req.preempts == 1
+        return hi
+
+    def test_preempted_deadline_counts_from_original_arrival(self, params):
+        eng = Engine(TINY, mesh11(), ServeConfig(**PAGED, num_pages=6),
+                     params)
+        lo = eng.submit(PROMPT, max_new=12, deadline_ms=60_000.0)
+        for _ in range(3):
+            eng.step()
+        hi = self._preempt(eng, lo, dict(max_new=12))
+        assert lo.status is RequestStatus.PREEMPTED
+        # the wait in the preempted queue spends the SAME budget the
+        # running phase did: age the one true clock past the deadline
+        lo._req.arrival_s -= 61.0
+        for _ in range(5):
+            eng.step()
+            if lo.done:
+                break
+        assert lo.status is RequestStatus.TIMED_OUT
+        drain(eng, [hi])
+        audit_engine(eng)
+
+    def test_resumed_deadline_counts_from_original_arrival(self, params):
+        """Preempt → resume → the request is RUNNING again, but its
+        deadline still keys off the original arrival, not re-admission."""
+        eng = Engine(TINY, mesh11(), ServeConfig(**PAGED, num_pages=6),
+                     params)
+        lo = eng.submit(PROMPT, max_new=16, deadline_ms=60_000.0)
+        for _ in range(3):
+            eng.step()
+        hi = self._preempt(eng, lo, dict(max_new=2))
+        drain(eng, [hi])                # frees pages; lo re-admits
+        for _ in range(10):
+            if lo.status is RequestStatus.RUNNING:
+                break
+            eng.step()
+        assert lo.status is RequestStatus.RUNNING
+        assert lo._req.preempts == 1
+        lo._req.arrival_s -= 61.0       # older than its 60 s deadline
+        for _ in range(5):
+            eng.step()
+            if lo.done:
+                break
+        assert lo.status is RequestStatus.TIMED_OUT
+        drain(eng, [lo])
+        audit_engine(eng)
+
+
+class TestDegradedRecovery:
+    """Satellite (PR 8): degraded mode is no longer one-way — after
+    ``degraded_recover_chunks`` consecutive clean chunks the dispatch
+    override clears, the backend re-traces onto the compiled plans and
+    ``degraded_recoveries`` counts the round trip."""
+
+    def _degrade(self, eng):
+        mk = ChaosMonkey(eng, ChaosConfig(seed=0, rate=0.0,
+                                          kernel_rate=1.0)).attach()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            for _ in range(5):
+                eng.step()
+                if eng.degraded:
+                    break
+        assert eng.degraded
+        return mk
+
+    def test_recovers_after_clean_chunks(self, params):
+        scfg = ServeConfig(**PAGED, num_pages=10,
+                           degraded_recover_chunks=3)
+        eng = Engine(TINY, mesh11(), scfg, params)
+        h = eng.submit(PROMPT, max_new=14)
+        mk = self._degrade(eng)
+        assert dispatch.mode_override() == "ref"
+        mk.detach()                     # faults stop; chunks run clean
+        drain(eng, [h])
+        st = eng.stats()
+        assert not st.degraded and not eng.degraded
+        assert st.degraded_recoveries == 1
+        assert dispatch.mode_override() is None
+        # the ref detour and the re-trace never perturb the stream
+        assert h.tokens == reference_decode(
+            params, TINY, PROMPT, 14, -1, 16, 64)
+        audit_engine(eng)
+
+    def test_zero_threshold_stays_one_way(self, params):
+        scfg = ServeConfig(**PAGED, num_pages=10,
+                           degraded_recover_chunks=0)
+        eng = Engine(TINY, mesh11(), scfg, params)
+        h = eng.submit(PROMPT, max_new=14)
+        mk = self._degrade(eng)
+        mk.detach()
+        drain(eng, [h])
+        assert eng.degraded             # PR 7 behavior preserved
+        assert eng.stats().degraded_recoveries == 0
+        assert dispatch.mode_override() == "ref"
+
+    def test_fault_during_probation_resets_streak(self, params):
+        scfg = ServeConfig(**PAGED, num_pages=10,
+                           degraded_recover_chunks=4)
+        eng = Engine(TINY, mesh11(), scfg, params)
+        h = eng.submit(PROMPT, max_new=16)
+        mk = self._degrade(eng)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            eng.step()                  # still faulting: streak pinned
+            eng.step()
+        assert eng._clean_chunks == 0
+        mk.detach()
+        for _ in range(3):              # 3 clean < threshold 4
+            eng.step()
+        assert eng.degraded
+        drain(eng, [h])                 # 4th clean chunk recovers
+        assert not eng.degraded
+        assert eng.stats().degraded_recoveries == 1
+
+
+class TestChaosFamilies:
+    """Satellite (PR 8): the chaos suite beyond the transformer LM —
+    hybrid (SSM + shared attention) and encoder-decoder engines under
+    injected faults, audited every step."""
+
+    HY = ModelConfig(name="hy", n_layers=3, d_model=64, vocab_size=256,
+                     n_heads=4, n_kv_heads=2, d_ff=128, remat=False,
+                     layer_kinds=(LayerKind.MAMBA, LayerKind.SHARED_ATTN,
+                                  LayerKind.MAMBA))
+    ED = ModelConfig(name="ed", n_layers=2, n_encoder_layers=2,
+                     d_model=64, vocab_size=256, n_heads=4, n_kv_heads=2,
+                     d_ff=128, remat=False, is_encoder_decoder=True)
+    SCFG = ServeConfig(slots=2, max_len=64, prompt_pad=16,
+                       max_new_tokens=6, decode_chunk=2, eos_token=-1,
+                       temperature=0.0)
+
+    def _chaos_run(self, cfg, scfg):
+        ps = MZ.init_model(jax.random.key(0), cfg)
+        ref_eng = Engine(cfg, mesh11(), scfg, ps)
+        ref_hs = [ref_eng.submit(PROMPT), ref_eng.submit(PROMPT_HI)]
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            ref_eng.run()
+        ref = [h.tokens for h in ref_hs]
+        eng = Engine(cfg, mesh11(), scfg, ps)
+        mk = ChaosMonkey(eng, ChaosConfig(
+            seed=5, rate=0.0, drop_rate=0.3, kernel_rate=0.3,
+            audit_every_step=True)).attach()
+        hs = [eng.submit(PROMPT), eng.submit(PROMPT_HI)]
+        drain(eng, hs)
+        mk.detach()
+        assert all(h.status is RequestStatus.DONE for h in hs)
+        # drop/kernel faults are transparent: fetch retries and the ref
+        # detour never perturb the greedy stream
+        assert [h.tokens for h in hs] == ref
+        audit_engine(eng)
+
+    def test_hybrid_chaos_audits_clean(self):
+        self._chaos_run(self.HY, self.SCFG)
+
+    def test_encdec_chaos_audits_clean(self):
+        self._chaos_run(self.ED, self.SCFG)
+
+    def test_hybrid_ssm_state_preempt_resume_parity(self):
+        """Preempt a hybrid request mid-decode and resume it: the SSM
+        recurrent state lives outside the paged KV pool and is rebuilt
+        by the resume re-prefill — the continued greedy stream must be
+        bit-identical to an uninterrupted run."""
+        scfg = ServeConfig(slots=2, max_len=64, prompt_pad=32,
+                           max_new_tokens=12, decode_chunk=2,
+                           eos_token=-1, temperature=0.0, page_size=8,
+                           prompt_buckets=8, num_pages=6)
+        ps = MZ.init_model(jax.random.key(0), self.HY)
+        ref_eng = Engine(self.HY, mesh11(), scfg, ps)
+        ref_lo = ref_eng.submit(PROMPT)
+        ref_hi = ref_eng.submit(PROMPT_HI, max_new=12)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            ref_eng.run()
+        eng = Engine(self.HY, mesh11(), scfg, ps)
+        lo = eng.submit(PROMPT)
+        for _ in range(3):
+            eng.step()
+        assert len(lo.tokens) > 0
+        hi = eng.submit(PROMPT_HI, max_new=12, priority=5)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            drain(eng, [lo, hi])
+        assert lo._req.preempts == 1
+        assert lo.tokens == ref_lo.tokens
+        assert hi.tokens == ref_hi.tokens
         audit_engine(eng)
