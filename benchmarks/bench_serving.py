@@ -615,6 +615,54 @@ def _crash_restore_scenario(mesh) -> list:
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+# --- tensor-parallel scaling scenario (sharded-d{1,2,4,8}) -----------------
+# tok/s and TTFT vs model-parallel extent on the simulated host mesh
+# (XLA_FLAGS=--xla_force_host_platform_device_count=8).  The model widens
+# to 8 KV heads / d_ff=512 so the column/row-parallel weight placements
+# and the head-parallel paged pool all engage at every extent; extents
+# beyond jax.device_count() are skipped (the row is omitted, not faked),
+# so a single-device run emits only sharded-d1.
+SD_SLOTS = 4
+SD_MAX_NEW = 8 if SMOKE else 32
+SD_DEVICES = (1, 2, 4, 8)
+SD_PAGE = 8
+
+
+def _sharded_scenario(rng) -> list:
+    scfg_sp = SPARSITY["combined"]
+    cfg = ModelConfig(name="bench-sharded", n_layers=N_LAYERS,
+                      d_model=64, vocab_size=VOCAB, n_heads=8,
+                      n_kv_heads=8, d_ff=512, remat=False,
+                      mlp_sparsity=scfg_sp)
+    params = pack_params(MZ.init_model(jax.random.key(0), cfg), cfg)
+    requests = _requests(rng, 2 * SD_SLOTS)
+    rows = []
+    for d in SD_DEVICES:
+        if d > jax.device_count():
+            continue
+        mesh = jax.make_mesh((1, d), ("data", "model"))
+        scfg = ServeConfig(slots=SD_SLOTS, max_len=MAX_LEN,
+                           prompt_pad=PROMPT_PAD,
+                           max_new_tokens=SD_MAX_NEW,
+                           decode_chunk=DECODE_CHUNK, temperature=0.0,
+                           eos_token=-1, page_size=SD_PAGE)
+        r = _serve_chunked(cfg, mesh, params, SD_SLOTS, requests,
+                           scfg=scfg, max_new=SD_MAX_NEW)
+        rows.append({
+            "config": f"sharded-d{d}", "devices": d, "slots": SD_SLOTS,
+            "tokens": r["tokens"],
+            "tok_per_s": round(r["tok_per_s"], 1),
+            "ttft_p50_ms": round(r["ttft_p50_ms"], 3),
+            "ttft_p95_ms": round(r["ttft_p95_ms"], 3),
+            "p50_ms": round(r["p50_ms"], 3),
+            "p95_ms": round(r["p95_ms"], 3),
+            "syncs": r["syncs"],
+            "kv_heads_per_shard": (cfg.n_kv_heads // d
+                                   if cfg.n_kv_heads % d == 0 else
+                                   cfg.n_kv_heads)})
+    return rows
+
+
 def run() -> dict:
     rng = np.random.default_rng(0)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
@@ -646,7 +694,12 @@ def run() -> dict:
     rows.extend(_shared_scenario(mesh))
     rows.extend(_preempt_scenario(mesh))
     rows.extend(_crash_restore_scenario(mesh))
+    rows.extend(_sharded_scenario(rng))
     return {"rows": rows, "decode_chunk": DECODE_CHUNK, "max_new": MAX_NEW,
+            "sharded": {"devices": [d for d in SD_DEVICES
+                                    if d <= jax.device_count()],
+                        "slots": SD_SLOTS, "max_new": SD_MAX_NEW,
+                        "page_size": SD_PAGE},
             "het": {"lens": HET_LENS, "page_size": HET_PAGE,
                     "max_len": HET_MAX_LEN, "pool_pages": _het_pool_pages(),
                     "max_new": HET_MAX_NEW},
@@ -674,7 +727,7 @@ def main(out=None) -> None:
           "ttft_p95_ms,syncs,ref_tok_per_s,speedup")
     for r in out["rows"]:
         if r["config"].startswith(("het-", "spec-", "shared-", "mixed-",
-                           "crash-")):
+                           "crash-", "sharded-")):
             continue
         print(f"{r['config']},{r['slots']},{r['tokens']},"
               f"{r['tok_per_s']},{r['p50_ms']},{r['p95_ms']},"
@@ -762,6 +815,20 @@ def main(out=None) -> None:
                   f"{r['p50_ms']},{r['p95_ms']},{r['ttft_p50_ms']},"
                   f"{r['ttft_p95_ms']},{r['syncs']},"
                   f"{r['speedup_vs_paged']}")
+    shd = [r for r in out["rows"] if r["config"].startswith("sharded-")]
+    if shd:
+        sd = out.get("sharded", {})
+        print(f"# tensor-parallel serving on {sd.get('slots')} slots — "
+              f"combined-sparse weights + head-parallel paged pool "
+              f"(page_size={sd.get('page_size')}) across "
+              f"{sd.get('devices')} simulated device(s)")
+        print("config,devices,slots,tokens,tok_per_s,ttft_p50_ms,"
+              "ttft_p95_ms,p50_ms,p95_ms,syncs,kv_heads_per_shard")
+        for r in shd:
+            print(f"{r['config']},{r['devices']},{r['slots']},"
+                  f"{r['tokens']},{r['tok_per_s']},{r['ttft_p50_ms']},"
+                  f"{r['ttft_p95_ms']},{r['p50_ms']},{r['p95_ms']},"
+                  f"{r['syncs']},{r['kv_heads_per_shard']}")
 
 
 if __name__ == "__main__":

@@ -22,17 +22,28 @@ verifying the flow, not for timing quality).
 
 from __future__ import annotations
 
+import dataclasses
+import os
+import tempfile
 import time
 from typing import List
 
 import jax
 import jax.numpy as jnp
 
+from repro import models as MZ
+from repro.core.sparse_linear import pack_params
+from repro.distributed import sharding as SH
 from repro.kernels import dispatch
 from repro.kernels.dispatch import PACK_TYPES
+from repro.models.config import ModelConfig
 
 
 SPEC_KS = (2, 4, 8)     # verify-block depths the spec rows serve at
+
+# shard-local warm geometry: wide enough that every model-parallel
+# extent below still divides the packed blocks (d_ff/8 = 64 = block_n)
+SD_D_MODEL, SD_FF, SD_HEADS = 64, 512, 8
 
 
 def _serving_ms(slots: int, prompt_pad: int, interpret: bool) -> List[int]:
@@ -90,7 +101,49 @@ def _layer_packs(params) -> List:
     return packs
 
 
-def run(slots: int = 8, prompt_pad: int = 128, reps: int = 1) -> dict:
+def _tp_model(scfg_sp, d_ff):
+    cfg = ModelConfig(name=f"warm-tp-{d_ff}", n_layers=1,
+                      d_model=SD_D_MODEL, vocab_size=256,
+                      n_heads=SD_HEADS, n_kv_heads=SD_HEADS, d_ff=d_ff,
+                      remat=False, mlp_sparsity=scfg_sp)
+    return cfg, pack_params(MZ.init_model(jax.random.key(0), cfg), cfg)
+
+
+def _shard_keys(params, mesh, M, mode):
+    """(engine cache key, shard-local (kind, K, N)) for every packed
+    weight that actually splits under ``mesh``'s model extent — the
+    exact keys a sharded engine's ``plan_params(..., shard_of=...)``
+    looks up (descriptor scaled the way ``dispatch.select`` scales it:
+    K/N divided, density kept from the full pack)."""
+    out, seen = [], set()
+
+    def visit(path, leaf):
+        if not isinstance(leaf, PACK_TYPES):
+            return leaf
+        parts = tuple(str(getattr(p, "key", getattr(p, "idx", "?")))
+                      for p in path)
+        kf, nf = SH.shard_factors(parts, mesh)
+        d = dispatch.SparsityDescriptor.of(leaf)
+        kf = kf if kf > 1 and d.K % kf == 0 else 1
+        nf = nf if nf > 1 and d.N % nf == 0 else 1
+        if kf == 1 and nf == 1:
+            return leaf
+        dsh = dataclasses.replace(d, K=d.K // kf, N=d.N // nf)
+        entry = dispatch._entry_for(dsh, M)
+        if entry is not None:
+            key = dispatch.cache_key(entry.name, M, dsh, mode)
+            if key not in seen:
+                seen.add(key)
+                out.append((key, (dsh.kind, dsh.K, dsh.N)))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: isinstance(x, PACK_TYPES))
+    return out
+
+
+def run(slots: int = 8, prompt_pad: int = 128, reps: int = 1,
+        device_counts=(2, 4, 8)) -> dict:
     """Sweep and persist; returns {"entries": [...], "cache_path": ...}.
 
     ``slots``/``prompt_pad`` should match the target server's
@@ -122,7 +175,6 @@ def run(slots: int = 8, prompt_pad: int = 128, reps: int = 1) -> dict:
                                 "cached": was_cached})
     # paged-attention: the decode-geometry key for the bench cache shape
     # (static config only — no weights needed for zero-filled pools)
-    from repro.models.config import ModelConfig
     from repro.kernels.paged_attention import PagedKV
     cfg = ModelConfig(name="warm-paged", n_layers=1, d_model=64,
                       vocab_size=256, n_heads=4, n_kv_heads=2, d_ff=128)
@@ -142,8 +194,73 @@ def run(slots: int = 8, prompt_pad: int = 128, reps: int = 1) -> dict:
         was_cached = cache.get(key) is not None
         blocks = dispatch.tune(q, kv, mode=mode, reps=reps)
         entries.append({"key": key, "blocks": blocks, "cached": was_cached})
+    # --- shard-local geometries (tensor-parallel serving) ------------------
+    # a model-parallel engine scales each pack's descriptor to its shard
+    # (column parallel: N/ext output features; row parallel: K/ext rows)
+    # and keys block lookups there — distinct cache rows from the sweeps
+    # above.  Packing the same model at d_ff/ext reproduces the exact
+    # shard-local MLP geometry, so the sweep times real shard-sized
+    # kernels; winners are recorded under the sharded plan's own keys.
+    for fmt in SPARSITY:
+        if SPARSITY[fmt] is None:
+            continue
+        _, full_params = _tp_model(SPARSITY[fmt], SD_FF)
+        for ext in device_counts:
+            if SD_FF % ext:
+                continue
+            mesh = SH.abstract_mesh((1, ext), ("data", "model"))
+            keys = _shard_keys(full_params, mesh, slots, mode)
+            if not keys:
+                continue
+            _, local_params = _tp_model(SPARSITY[fmt], SD_FF // ext)
+            local = {}
+            for p in _layer_packs(local_params):
+                dl = dispatch.SparsityDescriptor.of(p)
+                local[(dl.kind, dl.K, dl.N)] = p
+            for key, knk in keys:
+                pack = local.get(knk)
+                if pack is None:
+                    continue
+                dtype = getattr(pack, "values",
+                                getattr(pack, "enc", None)).dtype
+                x = jax.random.normal(jax.random.key(0), (slots, knk[1]),
+                                      jnp.float32).astype(dtype)
+                was_cached = cache.get(key) is not None
+                blocks = dispatch.tune(x, pack, mode=mode, reps=reps)
+                if blocks and cache.get(key) is None:
+                    cache.put(key, dict(blocks))
+                entries.append({"key": key, "blocks": blocks,
+                                "cached": was_cached, "devices": ext})
+    # head-parallel paged pools: per-shard head-count keys (h-suffixed).
+    # The plain paged key does not carry a head count, so each per-shard
+    # pool is swept for real against a scratch cache and the winner
+    # recorded under the sharded plan's key.
+    hd = SD_D_MODEL // SD_HEADS
+    with tempfile.TemporaryDirectory() as td:
+        scratch = dispatch.AutotuneCache(os.path.join(td, "scratch.json"))
+        for ext in device_counts:
+            if SD_HEADS % ext:
+                continue
+            hk = SD_HEADS // ext
+            pool = jnp.zeros((slots * mp + 1, HET_PAGE, hk, hd),
+                             jnp.bfloat16)
+            kv = PagedKV(pool, pool, jnp.zeros((slots, mp), jnp.int32),
+                         jnp.full((slots,), HET_PAGE, jnp.int32))
+            q = jnp.zeros((slots, SD_HEADS // ext, hd), jnp.bfloat16)
+            dsh = dispatch.SparsityDescriptor(
+                kind="paged", K=mp * HET_PAGE, N=hd, dtype="bfloat16",
+                g=HET_PAGE, bk=mp, n=hk)
+            key = dispatch.cache_key("paged_attention", slots, dsh, mode)
+            was_cached = cache.get(key) is not None
+            blocks = dispatch.tune(q, kv, mode=mode, reps=reps,
+                                   cache=scratch)
+            if blocks and cache.get(key) is None:
+                cache.put(key, dict(blocks))
+            entries.append({"key": key, "blocks": blocks,
+                            "cached": was_cached, "devices": ext})
     return {"entries": entries, "mode": mode, "wall_s": time.time() - t0,
-            "cache_path": cache.path, "cache_size": len(cache)}
+            "cache_path": cache.path, "cache_size": len(cache),
+            "device_counts": list(device_counts)}
 
 
 def main(out=None) -> None:

@@ -130,18 +130,60 @@ def _param_rule(names: Tuple[str, ...], shape: Tuple[int, ...],
         return P(*lead, e_ax, *inner)
     if last == "conv_w":             # mamba depthwise conv (K, conv_dim)
         return P(*(None,) * (nd - 1), "model")
-    # sparse-pack leaves: "values" inherits the parent weight's rule;
-    # index/scale metadata replicates (small, SMEM-bound on TPU)
+    # sparse-pack leaves: "values" inherits the parent weight's rule, and
+    # the index metadata shards ALIGNED with it so the gather paths stay
+    # shard-local (misaligned metadata forces GSPMD to rematerialize the
+    # full pack — visible as "[spmd] Involuntary full rematerialization").
+    parent_col = any(n in _COL_PARALLEL for n in names)
+    parent_row = any(n in _ROW_PARALLEL for n in names)
     if last == "values" and nd >= 2:
-        parent_col = any(n in _COL_PARALLEL for n in names)
-        parent_row = any(n in _ROW_PARALLEL for n in names)
-        lead = (None,) * (nd - 2)
+        if nd >= 4:
+            # BSR/combined strips (.., Nb, max_nnz, bk, bn): Nb indexes
+            # output-feature strips — the TP split the paper's layout
+            # argument calls for.  Row-parallel parents FSDP-shard the
+            # strip axis instead (their TP split is the contraction dim,
+            # which the irregular nnz axis cannot carry).
+            lead = (None,) * (nd - 4)
+            if parent_col:
+                return P(*lead, "model", None, None, None)
+            if parent_row:
+                return P(*lead, dp, None, None, None)
+            return P(*(None,) * nd)
+        lead = (None,) * (nd - 2)   # N:M (.., Kc, N)
         if parent_col:
             return P(*lead, dp, "model")
         if parent_row:
             return P(*lead, "model", dp)
         return P(*(None,) * nd)
-    if last in ("idx", "counts", "indices", "gidx", "scale", "enc"):
+    if last == "idx" and nd >= 2:            # N:M (.., Kc, N//g)
+        lead = (None,) * (nd - 2)
+        if parent_col:
+            return P(*lead, None, "model")
+        if parent_row:
+            return P(*lead, "model", None)
+        return P(*(None,) * nd)
+    if last == "indices" and nd >= 2:        # BSR (.., Nb, max_nnz)
+        lead = (None,) * (nd - 2)
+        if parent_col:
+            return P(*lead, "model", None)
+        if parent_row:
+            return P(*lead, dp, None)
+        return P(*(None,) * nd)
+    if last == "counts" and nd >= 1:         # BSR (.., Nb)
+        lead = (None,) * (nd - 1)
+        if parent_col:
+            return P(*lead, "model")
+        if parent_row:
+            return P(*lead, dp)
+        return P(*(None,) * nd)
+    if last == "gidx" and nd >= 3:           # combined (.., Nb, nnz, bn//g)
+        lead = (None,) * (nd - 3)
+        if parent_col:
+            return P(*lead, "model", None, None)
+        if parent_row:
+            return P(*lead, dp, None, None)
+        return P(*(None,) * nd)
+    if last in ("scale", "enc"):
         return P(*(None,) * nd)
     if last in _COL_PARALLEL:
         lead = (None,) * (nd - 2)
@@ -188,6 +230,25 @@ def param_specs(abstract_params: Any, cfg: ModelConfig, mesh: Mesh,
         return best_effort(spec, leaf.shape, mesh)
 
     return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def shard_factors(names: Tuple[str, ...], mesh: Mesh) -> Tuple[int, int]:
+    """(K-split, N-split) of a weight's matmul geometry on ``mesh``.
+
+    Used by ``kernels.dispatch`` to key autotune plans on the SHARD-LOCAL
+    problem size: a column-parallel weight computes N/ext output features
+    per shard, a row-parallel one contracts K/ext.  Callers only apply a
+    factor when it divides (``dispatch.select`` checks), mirroring
+    :func:`best_effort`.
+    """
+    ext = int(dict(mesh.shape).get("model", 1))
+    if ext <= 1:
+        return (1, 1)
+    if any(n in _COL_PARALLEL for n in names):
+        return (1, ext)
+    if any(n in _ROW_PARALLEL for n in names):
+        return (ext, 1)
+    return (1, 1)
 
 
 # ---------------------------------------------------------------------------

@@ -94,7 +94,11 @@ class SparsityDescriptor:
             return (f"csa{self.bk}x{self.bn}d{self.density:.2f}"
                     f"+{self.n}:{self.m}")
         if self.kind == "paged":
-            return f"paged{self.g}x{self.bk}"
+            # ``n`` carries the shard-local KV head count when the pool is
+            # head-parallel (absent on single-device keys, so the cache
+            # stays backward compatible)
+            heads = f"h{self.n}" if self.n else ""
+            return f"paged{self.g}x{self.bk}{heads}"
         return self.kind
 
     @classmethod
@@ -503,14 +507,26 @@ def _ref_decision(desc: SparsityDescriptor, entry_name: str,
 
 
 def select(weight: Any, M: int = 128, impl: str = "auto",
-           autotune: Optional[bool] = None) -> Decision:
+           autotune: Optional[bool] = None,
+           shard: Optional[Tuple[int, int]] = None) -> Decision:
     """Pick (kernel, mode, block sizes) for ``x (M, K) @ weight``.
 
     Pure function of structure — no execution.  ``autotune=None`` means
     "sweep on compiled-path cache miss"; ``False`` uses defaults on miss;
     ``True`` forces a sweep even in interpret mode (tests).
+
+    ``shard=(kf, nf)`` keys the decision at the SHARD-LOCAL problem
+    (``K/kf``, ``N/nf``) — what each mesh slice actually computes under
+    tensor parallelism.  A factor that does not divide is ignored
+    (mirrors ``sharding.best_effort``: that axis stayed replicated).
     """
     desc = SparsityDescriptor.of(weight)
+    if shard is not None:
+        kf, nf = shard
+        kf = kf if kf > 1 and desc.K % kf == 0 else 1
+        nf = nf if nf > 1 and desc.N % nf == 0 else 1
+        if kf > 1 or nf > 1:
+            desc = dataclasses.replace(desc, K=desc.K // kf, N=desc.N // nf)
     mode = resolve_mode(impl)
     entry = _entry_for(desc, M)
     if entry is None:
@@ -686,7 +702,8 @@ def paged_attention(q: Array, kv: Any, *, impl: str = "auto") -> Array:
 
 def plan_paged_attention(cfg: Any, batch: int, page_size: int,
                          max_pages: int, impl: str = "auto",
-                         dtype: str = "bfloat16") -> dict:
+                         dtype: str = "bfloat16",
+                         kv_heads: Optional[int] = None) -> dict:
     """The paged-attention row of a serving plan — same shape as
     :func:`plan_params` entries, keyed by the page-shaped descriptor so
     the autotune cache and plan introspection see the cache geometry
@@ -697,10 +714,14 @@ def plan_paged_attention(cfg: Any, batch: int, page_size: int,
     loop runs the inline jnp scatter/gather in ``models.attention`` (the
     SPMD-partitionable form, semantically the ``ref`` oracle), while
     :func:`paged_attention` exposes the kernel for page-shaped decode
-    calls and benchmarks; this row records the geometry both share."""
+    calls and benchmarks; this row records the geometry both share.
+
+    ``kv_heads`` keys the row at a SHARD-LOCAL head count (head-parallel
+    paged pools under TP serve ``Hk/model_ext`` heads per shard); omitted
+    on single-device plans so existing cache keys are untouched."""
     desc = SparsityDescriptor(kind="paged", K=max_pages * page_size,
                               N=cfg.head_dim, dtype=dtype,
-                              g=page_size, bk=max_pages)
+                              g=page_size, bk=max_pages, n=kv_heads)
     mode = resolve_mode(impl)
     entry = _REGISTRY["paged_attention"]
     blocks = dict(entry.candidates(desc, batch)[0])
@@ -733,22 +754,34 @@ def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 # Whole-model planning (serving warm-up / introspection)
 # ---------------------------------------------------------------------------
 
-def plan_params(params: Any, M: int = 128, impl: str = "auto") -> List[dict]:
+def plan_params(params: Any, M: int = 128, impl: str = "auto",
+                shard_of: Optional[Callable[[Tuple[str, ...]],
+                                            Tuple[int, int]]] = None
+                ) -> List[dict]:
     """Walk a param pytree and record the dispatch decision for every
     packed weight — the serving engine calls this at build time, once per
     phase geometry (``M = prompt_pad`` rows for prefill, ``M = slots``
     for decode), so the kernel/mode/block selection (and any autotune
-    misses) is visible before the first request, not during it."""
+    misses) is visible before the first request, not during it.
+
+    ``shard_of(path_names) -> (kf, nf)`` maps a weight's pytree path to
+    its tensor-parallel split (``sharding.shard_factors``), so sharded
+    engines key plans at the per-device problem size."""
     plan: List[dict] = []
 
     def visit(path, leaf):
         if isinstance(leaf, PACK_TYPES):
-            name = "/".join(str(getattr(p, "key", getattr(p, "idx", "?")))
-                            for p in path)
-            d = select(leaf, M=M, impl=impl)
-            plan.append({"param": name, "M": M, "kernel": d.kernel,
-                         "mode": d.mode, "blocks": dict(d.blocks),
-                         "pattern": d.descriptor.pattern})
+            parts = tuple(str(getattr(p, "key", getattr(p, "idx", "?")))
+                          for p in path)
+            name = "/".join(parts)
+            shard = shard_of(parts) if shard_of is not None else None
+            d = select(leaf, M=M, impl=impl, shard=shard)
+            row = {"param": name, "M": M, "kernel": d.kernel,
+                   "mode": d.mode, "blocks": dict(d.blocks),
+                   "pattern": d.descriptor.pattern}
+            if shard is not None and shard != (1, 1):
+                row["shard"] = list(shard)
+            plan.append(row)
         return leaf
 
     jax.tree_util.tree_map_with_path(

@@ -15,11 +15,14 @@ code change.
 
 from __future__ import annotations
 
+import logging
 from typing import Optional
 
 import jax
 import numpy as np
 from jax.sharding import Mesh
+
+log = logging.getLogger(__name__)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -30,12 +33,31 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 def make_elastic_mesh(model_parallel: int = 16,
                       devices: Optional[list] = None) -> Mesh:
-    """Whatever-fits mesh: ``model`` fixed, ``data`` = n_devices / model."""
+    """Whatever-fits mesh: ``model`` fixed, ``data`` = n_devices / model.
+
+    Raises when the requested TP exceeds the device count (the model was
+    sized for that shard width — silently serving it on 1 device OOMs or
+    lies about the measured posture).  When ``model_parallel`` merely
+    fails to divide ``n``, the largest divisor ≤ request is used and the
+    chosen shape is logged.
+    """
     devs = devices if devices is not None else jax.devices()
     n = len(devs)
-    mp = min(model_parallel, n)
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel must be >= 1, got {model_parallel}")
+    if model_parallel > n:
+        raise ValueError(
+            f"model_parallel={model_parallel} exceeds the {n} available "
+            f"device(s); pass --devices/--model-parallel that fit (e.g. "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={model_parallel}"
+            " on CPU)")
+    mp = model_parallel
     while n % mp:
         mp -= 1
+    if mp != model_parallel:
+        log.warning("make_elastic_mesh: model_parallel=%d does not divide "
+                    "%d devices; using mesh shape data=%d x model=%d",
+                    model_parallel, n, n // mp, mp)
     return Mesh(np.array(devs[: (n // mp) * mp]).reshape(n // mp, mp),
                 ("data", "model"))
 

@@ -8,12 +8,27 @@ the dry-run's decode cells lower.
 Example:
   python -m repro.launch.serve --arch qwen3-0.6b --reduced \\
       --requests 16 --max-new 32
+
+Tensor-parallel serving: ``--model-parallel N`` builds the elastic
+``("data","model")`` mesh and the Engine places the (packed) weights and
+the head-parallel paged KV pool per ``distributed.sharding``.  On a
+CPU-only host, ``--devices N`` simulates N devices
+(``--xla_force_host_platform_device_count``) — set BEFORE jax imports,
+which is why this module defers ``import jax`` into ``main()``.
+
+``--dry-run`` lowers + compiles the actual serving programs (per-slot
+paged prefill, the chunked decode loop) for the FULL config on abstract
+weights — no parameters materialize, so the 132B-class cells run on a
+laptop.  Reports per-device memory analysis and the sharded dispatch
+plan as JSON; this is how CI proves ``dbrx_132b``/``qwen2_vl_72b``
+serve on the simulated 8-way mesh.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import numpy as np
@@ -97,8 +112,27 @@ def main() -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="simulate N host devices (CPU SPMD via "
+                         "--xla_force_host_platform_device_count; must "
+                         "be set before jax initializes, so only this "
+                         "launcher can apply it)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower + compile the serving programs on "
+                         "abstract weights (no params materialize) and "
+                         "report per-device memory + the dispatch plan "
+                         "as JSON — the 132B-class configs' CI path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+
+    if args.dry_run:
+        return _dry_run(args)
 
     import jax
 
@@ -213,6 +247,117 @@ def main() -> int:
             "accepted_tokens": stats.accepted,
             "acceptance_rate": round(stats.acceptance_rate, 4),
         })
+    print(json.dumps(report))
+    return 0
+
+
+def _dry_run(args) -> int:
+    """AOT-compile the serving programs on abstract weights.
+
+    Mirrors ``launch.dryrun``: ``eval_shape`` the param/cache pytrees,
+    preflight the sharding specs, then ``jit(...).lower(...).compile()``
+    the per-slot prefill step and the chunked decode loop under the
+    elastic mesh.  ``memory_analysis()`` of the compiled executables is
+    the fits-per-device proof; nothing ever materializes.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs as C
+    from repro import models as MZ
+    from repro.distributed import sharding as SH
+    from repro.launch.mesh import make_elastic_mesh, mesh_chips
+    from repro.serving import ServeConfig, loops
+    from repro.serving.sharded import build_plans, kv_heads_per_shard
+
+    t0 = time.time()
+    mod = C._module(args.arch)
+    cfg = mod.reduced() if args.reduced else mod.config()
+    mesh = make_elastic_mesh(model_parallel=args.model_parallel)
+
+    rng = jax.random.key(args.seed)
+    abstract_params = jax.eval_shape(lambda: MZ.init_model(rng, cfg))
+    pspecs = SH.param_specs(abstract_params, cfg, mesh)
+    problems = SH.validate_specs(abstract_params, pspecs, mesh)
+    if problems:
+        raise ValueError(f"param spec problems: {problems[:5]}")
+
+    page_size = args.page_size or 16
+    scfg = ServeConfig(slots=args.slots, max_len=args.max_len,
+                       prompt_pad=args.prompt_pad,
+                       max_new_tokens=args.max_new,
+                       decode_chunk=args.decode_chunk,
+                       page_size=page_size, num_pages=args.num_pages,
+                       seed=args.seed)
+    abstract_cache = jax.eval_shape(
+        lambda: MZ.init_cache(cfg, scfg.slots, scfg.max_len,
+                              page_size=scfg.page_size,
+                              num_pages=scfg.pool_pages))
+    cspecs = SH.cache_specs(abstract_cache, cfg, mesh, kv_mode=scfg.kv_mode)
+    problems = SH.validate_specs(abstract_cache, cspecs, mesh)
+    if problems:
+        raise ValueError(f"cache spec problems: {problems[:5]}")
+
+    def sds(shape, dtype=jnp.int32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    state = {"tok": sds((scfg.slots,)), "pos": sds((scfg.slots,)),
+             "done": sds((scfg.slots,), bool), "left": sds((scfg.slots,))}
+    key = jax.eval_shape(lambda: jax.random.key(0))
+    temps = sds((scfg.slots,), jnp.float32)
+    ptab = sds((scfg.slots, scfg.max_pages))
+
+    def _mem(compiled):
+        ma = compiled.memory_analysis()
+        mem = {k: int(getattr(ma, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")}
+        mem["total_per_device"] = (mem["argument_size_in_bytes"]
+                                   + mem["output_size_in_bytes"]
+                                   + mem["temp_size_in_bytes"])
+        return mem
+
+    programs = {}
+    with mesh:
+        prefill = loops.build_prefill_slot_step(
+            cfg, mesh, scfg, abstract_params, abstract_cache,
+            prompt_rows=scfg.prompt_pad, paged=True)
+        batch = {"tokens": sds((1, scfg.prompt_pad))}
+        t = time.time()
+        cp = prefill.lower(abstract_params, batch, abstract_cache, state,
+                           sds(()), sds(()), sds((), jnp.float32), key,
+                           sds((scfg.max_pages,))).compile()
+        programs["prefill_slot"] = {"compile_s": round(time.time() - t, 2),
+                                    "memory": _mem(cp)}
+        decode = loops.build_decode_loop(
+            cfg, mesh, scfg, abstract_params, abstract_cache, paged=True)
+        t = time.time()
+        cd = decode.lower(abstract_params, abstract_cache, state, temps,
+                          key, ptab).compile()
+        programs["decode_loop"] = {"compile_s": round(time.time() - t, 2),
+                                   "memory": _mem(cd)}
+
+    plans = build_plans(abstract_params, None, cfg, scfg, mesh=mesh)
+
+    def _bytes(tree):
+        return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree.leaves(tree))
+
+    report = {
+        "arch": cfg.name, "dry_run": True,
+        "devices": mesh_chips(mesh), "mesh": dict(mesh.shape),
+        "params": cfg.param_count(),
+        "param_bytes_global": _bytes(abstract_params),
+        "cache_bytes_global": _bytes(abstract_cache),
+        "kv_heads_per_shard": kv_heads_per_shard(cfg, mesh),
+        "slots": scfg.slots, "max_len": scfg.max_len,
+        "page_size": scfg.page_size, "pool_pages": scfg.pool_pages,
+        "decode_chunk": scfg.decode_chunk,
+        "programs": programs,
+        "plan_rows": {k: len(v) for k, v in plans.items()},
+        "decode_plan_sample": plans["decode"][:3],
+        "wall_s": round(time.time() - t0, 2),
+    }
     print(json.dumps(report))
     return 0
 

@@ -326,6 +326,12 @@ def attention(params: Params, cfg: ModelConfig, x: Array, positions: Array,
         Hk, D = k.shape[-2], k.shape[-1]
         k = ck[pt].reshape(B, -1, Hk, D)
         v = cv[pt].reshape(B, -1, Hk, D)
+        if ext > 1 and Hk % ext == 0:
+            # head-parallel pool (cache_specs "heads"): keep the gathered
+            # view sharded on its head axis so the page gather stays
+            # shard-local and attention runs collective-free per head
+            k = constrain(k, batch_axes(), None, MODEL, None)
+            v = constrain(v, batch_axes(), None, MODEL, None)
         kv_len = cpb + Lq
     elif cache is not None:
         # write the new k/v at cache_pos, attend over the whole cache.

@@ -57,13 +57,13 @@ from jax.sharding import Mesh
 
 from repro import models as MZ
 from repro.distributed import sharding as SH
-from repro.kernels import dispatch
 from repro.models.config import ModelConfig
 from repro.serving.backends import CacheBackend, make_backend
 from repro.serving.config import ServeConfig
 from repro.serving.faults import FaultTolerance
 from repro.serving.journal import Journal, recover_engine, snapshot_engine
 from repro.serving.prefix import PrefixHandle
+from repro.serving.sharded import build_plans, model_extent, place_params
 from repro.serving.state import (TERMINAL_STATUSES, Request, RequestHandle,
                                  RequestStatus, TokenEvent, _device_fetch,
                                  _fresh_stats, _StatsAccessor,
@@ -82,52 +82,6 @@ def _fetch(tree: Any) -> Any:
     if compat is not None:
         return compat._device_fetch(tree)
     return _device_fetch(tree)
-
-
-def _build_plans(params: Any, draft_params: Any, cfg: ModelConfig,
-                 scfg: ServeConfig) -> Dict[str, list]:
-    """Dispatch plans per phase geometry.
-
-    Kernel/mode/blocks are resolved per packed weight at each phase's
-    real geometry (apply_linear flattens leading dims into M): wave
-    prefill runs ``M = slots*prompt_pad``, per-slot refill
-    ``M = prompt_pad`` (entries carry their M), decode one token per
-    slot (``M = slots``).  Speculative phases get their own rows — the
-    draft re-plans the (usually sparse-packed) draft weights at the
-    decode geometry, the verify plans the dense weights at
-    ``M = slots*(spec_k+1)``; under paging both plans additionally
-    carry the paged-attention decision (its own page-shaped key).
-    """
-    plans = {
-        "prefill": (dispatch.plan_params(params,
-                                         M=scfg.slots * scfg.prompt_pad)
-                    + dispatch.plan_params(params, M=scfg.prompt_pad)),
-        "decode": dispatch.plan_params(params, M=scfg.slots),
-        "draft": [], "verify": [],
-    }
-    if scfg.spec:
-        plans["draft"] = dispatch.plan_params(draft_params, M=scfg.slots)
-        plans["verify"] = dispatch.plan_params(
-            params, M=scfg.slots * (scfg.spec_k + 1))
-        # a speculative decode chunk runs both phases — its plan carries
-        # the draft rows (the sparse kernels doing the per-token work)
-        # and the verify-shaped rows
-        plans["decode"] = plans["decode"] + plans["draft"] + plans["verify"]
-    if scfg.paged:
-        pa = dispatch.plan_paged_attention(
-            cfg, batch=scfg.slots, page_size=scfg.page_size,
-            max_pages=scfg.max_pages)
-        plans["prefill"] = plans["prefill"] + [pa]
-        plans["decode"] = plans["decode"] + [pa]
-        if scfg.spec:
-            # the verify scores spec_k+1 queries per slot — its
-            # paged-attention row is keyed at the block geometry
-            pav = dispatch.plan_paged_attention(
-                cfg, batch=scfg.slots * (scfg.spec_k + 1),
-                page_size=scfg.page_size, max_pages=scfg.max_pages)
-            plans["verify"] = plans["verify"] + [pav]
-            plans["decode"] = plans["decode"] + [pav]
-    return plans
 
 
 class Engine(FaultTolerance):
@@ -174,7 +128,19 @@ class Engine(FaultTolerance):
                 draft_params = params
         self.draft_params = draft_params
 
-        plans = _build_plans(params, self.draft_params, cfg, scfg)
+        # multi-device model axis: place the (packed) weights per the
+        # sharding rules up front — idempotent for already-placed trees,
+        # so callers may pre-shard (checkpoints restore sharded)
+        if model_extent(mesh) > 1:
+            self_draft = self.draft_params is params
+            params = place_params(params, cfg, mesh)
+            self.params = params
+            if self.draft_params is not None:
+                self.draft_params = (params if self_draft else
+                                     place_params(self.draft_params, cfg,
+                                                  mesh))
+
+        plans = build_plans(params, self.draft_params, cfg, scfg, mesh=mesh)
         self.prefill_plan = plans["prefill"]
         self.decode_plan = plans["decode"]
         self.draft_plan = plans["draft"]

@@ -510,6 +510,12 @@ def make_backend(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
                  abstract_params: Any, abstract_draft: Any,
                  abstract_cache: Any, stats: Dict[str, Any]
                  ) -> CacheBackend:
+    if int(dict(mesh.shape).get("model", 1)) > 1:
+        # lazy import: serving.sharded imports this module for the base
+        # classes, so the dependency must stay one-way at import time
+        from repro.serving.sharded import make_sharded_backend
+        return make_sharded_backend(cfg, mesh, scfg, abstract_params,
+                                    abstract_draft, abstract_cache, stats)
     kind = PagedBackend if scfg.paged else MonoBackend
     return kind(cfg, mesh, scfg, abstract_params, abstract_draft,
                 abstract_cache, stats)

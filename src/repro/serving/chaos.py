@@ -435,6 +435,17 @@ def _audit_journal(engine: Any) -> Dict[str, int]:
             "journal_pins": len(st.pins)}
 
 
+def _audit_shards(engine: Any) -> Dict[str, int]:
+    """Per-shard extension (sharded backends only): the device cache's
+    page tables must be bit-identical replicas and the page pool must
+    never shard its page axis — see
+    :meth:`serving.sharded._ShardedMixin.audit_shards`."""
+    b = engine._backend
+    if not getattr(b, "sharded", False) or engine._cache is None:
+        return {}
+    return b.audit_shards(engine._cache)
+
+
 def audit_engine(engine: Any) -> Dict[str, Any]:
     """Check every structural invariant the serving stack promises —
     see the module docstring.  Returns a small report dict; raises
@@ -442,4 +453,5 @@ def audit_engine(engine: Any) -> Dict[str, Any]:
     report = _audit_requests(engine)
     report.update(_audit_pages(engine))
     report.update(_audit_journal(engine))
+    report.update(_audit_shards(engine))
     return report

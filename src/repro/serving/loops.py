@@ -384,11 +384,14 @@ def build_decode_loop(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
             return scan_chunk(params, cache, state, temps, key)
 
     extra = (None,) if paged else ()
+    # the fetched token block is pinned FULLY REPLICATED: the one host
+    # sync per chunk reads it without a cross-shard gather, on any mesh
+    rep = NamedSharding(mesh, P())
     return jax.jit(
         loop,
         in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, cspecs),
                       sspecs, None, None) + extra,
-        out_shardings=(SH.named(mesh, cspecs), sspecs, None, None),
+        out_shardings=(SH.named(mesh, cspecs), sspecs, rep, rep),
         donate_argnums=(1, 2))
 
 
@@ -570,18 +573,22 @@ def build_spec_decode_loop(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
             cache = MZ.set_page_table(cache, ptab)
             return scan_chunk(params, dparams, cache, state, key)
 
+        # token block + drafted/accepted tallies replicate (see
+        # build_decode_loop): the chunk fetch never gathers cross-shard
+        rep = NamedSharding(mesh, P())
         return jax.jit(
             loop,
             in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, dspecs),
                           SH.named(mesh, cspecs), sspecs, None, None),
-            out_shardings=(SH.named(mesh, cspecs), sspecs, None, None,
-                           None, None),
+            out_shardings=(SH.named(mesh, cspecs), sspecs, rep, rep,
+                           rep, rep),
             donate_argnums=(2, 3))
 
+    rep = NamedSharding(mesh, P())
     return jax.jit(
         scan_chunk,
         in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, dspecs),
                       SH.named(mesh, cspecs), sspecs, None),
-        out_shardings=(SH.named(mesh, cspecs), sspecs, None, None,
-                       None, None),
+        out_shardings=(SH.named(mesh, cspecs), sspecs, rep, rep,
+                       rep, rep),
         donate_argnums=(2, 3))

@@ -1,0 +1,252 @@
+"""Tensor-parallel sharded serving: placement, plans, per-shard audit.
+
+The serving loops in ``serving.loops`` are mesh-parameterized already —
+every jitted program pins its operands with ``NamedSharding`` — so TP
+serving is a *placement* problem, not a tracing one.  This module owns
+that placement:
+
+  * :func:`place_params` puts the packed sparse weights onto the
+    ``("data", "model")`` mesh under ``distributed.sharding.param_specs``
+    — N:M and BSR strips shard along output features, dense params via
+    the name-based rules, metadata aligned with its values (the layout
+    the paper's co-design argument calls for: the sparse format is laid
+    out for the parallel execution geometry).
+  * :func:`build_plans` resolves the dispatch plans at the SHARD-LOCAL
+    problem size (``sharding.shard_factors`` per weight, per-shard KV
+    head counts on the paged-attention rows), so the autotune cache is
+    keyed by what each device actually computes.
+  * :class:`ShardedMonoBackend` / :class:`ShardedPagedBackend` are the
+    mesh-aware cache backends ``make_backend`` selects when the model
+    axis is wider than one device.  The paged pool is HEAD-PARALLEL
+    (``kv_mode="heads"``): each shard holds ``Hk/ext`` heads of every
+    page, page ids stay global, and the host allocator's
+    reservation/admission arithmetic is unchanged — per-shard state is a
+    head slice, never a separate pool to rebalance.  Page tables
+    replicate; :meth:`audit_shards` extends ``engine.audit()``'s
+    page-ownership invariant per shard by checking exactly that: every
+    shard sees the same table, and no pool leaf is ever sharded along
+    the page axis (a page id must resolve on every shard).
+
+Decode collectives are the only cross-shard traffic: prefill and decode
+chunks run fully on-device, and the one host sync per chunk fetches the
+token block, which the loops pin fully replicated — the
+one-fetch-per-chunk contract survives sharding by construction.
+
+Everything runs on CPU CI under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; greedy decode on
+the simulated 8-way mesh is bit-identical to the single-device Engine
+(tests/test_sharded.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as SH
+from repro.kernels import dispatch
+from repro.models.config import ModelConfig
+from repro.serving.backends import MonoBackend, PagedBackend
+from repro.serving.config import ServeConfig
+
+__all__ = ["model_extent", "kv_heads_per_shard", "place_params",
+           "build_plans", "ShardedMonoBackend", "ShardedPagedBackend"]
+
+
+def model_extent(mesh: Optional[Mesh]) -> int:
+    """Width of the ``model`` mesh axis (1 when absent/None)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get("model", 1))
+
+
+def kv_heads_per_shard(cfg: ModelConfig, mesh: Optional[Mesh]
+                       ) -> Optional[int]:
+    """Shard-local KV head count under the head-parallel posture, or
+    ``None`` when the pool is not head-sharded (single device, or Hk
+    does not divide the model axis — ``cache_specs`` then replicates
+    the head axis and every shard serves all heads)."""
+    ext = model_extent(mesh)
+    hk = cfg.n_kv_heads or cfg.n_heads
+    if ext > 1 and hk % ext == 0:
+        return hk // ext
+    return None
+
+
+def place_params(params: Any, cfg: ModelConfig, mesh: Mesh,
+                 profile: str = "tp") -> Any:
+    """device_put a param pytree onto ``mesh`` per the sharding rules.
+
+    Idempotent: leaves already carrying the target sharding transfer
+    nothing.  Works for the draft pack tree too (rules are name-based).
+    """
+    specs = SH.param_specs(jax.eval_shape(lambda: params), cfg, mesh,
+                           profile=profile)
+    return jax.device_put(params, SH.named(mesh, specs))
+
+
+def build_plans(params: Any, draft_params: Any, cfg: ModelConfig,
+                scfg: ServeConfig, mesh: Optional[Mesh] = None
+                ) -> Dict[str, list]:
+    """Dispatch plans per phase geometry (moved from ``serving.api``).
+
+    Kernel/mode/blocks are resolved per packed weight at each phase's
+    real geometry (apply_linear flattens leading dims into M): wave
+    prefill runs ``M = slots*prompt_pad``, per-slot refill
+    ``M = prompt_pad`` (entries carry their M), decode one token per
+    slot (``M = slots``).  Speculative phases get their own rows — the
+    draft re-plans the (usually sparse-packed) draft weights at the
+    decode geometry, the verify plans the dense weights at
+    ``M = slots*(spec_k+1)``; under paging both plans additionally
+    carry the paged-attention decision (its own page-shaped key).
+
+    On a mesh with a model axis wider than one device, every row is
+    keyed at the shard-local problem: weight rows via
+    ``sharding.shard_factors`` (column-parallel packs plan ``N/ext``
+    output features, row-parallel ``K/ext`` contraction), the
+    paged-attention rows via the per-shard KV head count.
+    """
+    shard_of = None
+    kvh = None
+    if model_extent(mesh) > 1:
+        shard_of = lambda names: SH.shard_factors(names, mesh)  # noqa: E731
+        kvh = kv_heads_per_shard(cfg, mesh)
+    pp = lambda p, M: dispatch.plan_params(p, M=M,          # noqa: E731
+                                           shard_of=shard_of)
+    plans = {
+        "prefill": (pp(params, scfg.slots * scfg.prompt_pad)
+                    + pp(params, scfg.prompt_pad)),
+        "decode": pp(params, scfg.slots),
+        "draft": [], "verify": [],
+    }
+    if scfg.spec:
+        plans["draft"] = pp(draft_params, scfg.slots)
+        plans["verify"] = pp(params, scfg.slots * (scfg.spec_k + 1))
+        # a speculative decode chunk runs both phases — its plan carries
+        # the draft rows (the sparse kernels doing the per-token work)
+        # and the verify-shaped rows
+        plans["decode"] = plans["decode"] + plans["draft"] + plans["verify"]
+    if scfg.paged:
+        pa = dispatch.plan_paged_attention(
+            cfg, batch=scfg.slots, page_size=scfg.page_size,
+            max_pages=scfg.max_pages, kv_heads=kvh)
+        plans["prefill"] = plans["prefill"] + [pa]
+        plans["decode"] = plans["decode"] + [pa]
+        if scfg.spec:
+            # the verify scores spec_k+1 queries per slot — its
+            # paged-attention row is keyed at the block geometry
+            pav = dispatch.plan_paged_attention(
+                cfg, batch=scfg.slots * (scfg.spec_k + 1),
+                page_size=scfg.page_size, max_pages=scfg.max_pages,
+                kv_heads=kvh)
+            plans["verify"] = plans["verify"] + [pav]
+            plans["decode"] = plans["decode"] + [pav]
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# Sharded backends
+# ---------------------------------------------------------------------------
+
+class _ShardedMixin:
+    """Mesh-aware introspection + per-shard audit over a cache backend.
+
+    No scheduling behavior changes: admission, reservation and page
+    recycling are host arithmetic over GLOBAL page ids, valid on every
+    shard because the pool's page axis is never sharded.
+    """
+
+    sharded = True
+
+    def shard_info(self) -> Dict[str, Any]:
+        """The placement summary the launch report / tests read."""
+        ext = model_extent(self.mesh)
+        hk = self.cfg.n_kv_heads or self.cfg.n_heads
+        kvh = kv_heads_per_shard(self.cfg, self.mesh)
+        return {
+            "mesh": dict(self.mesh.shape),
+            "model_extent": ext,
+            "kv_heads_total": hk,
+            "kv_heads_per_shard": kvh if kvh is not None else hk,
+            "kv_mode": ("heads" if kvh is not None else
+                        ("replicated" if ext > 1 else "single")),
+        }
+
+    def audit_shards(self, cache: Any) -> Dict[str, int]:
+        """Per-shard extension of the page-ownership invariant.
+
+        1. Every ``ptab`` leaf is bit-identical across its addressable
+           shards (the table is the allocator's single source of truth —
+           a divergent replica means one shard attends to pages another
+           shard already recycled).
+        2. No pool leaf (``kp``/``vp``) is sharded along its page axis,
+           and head axes carry either ``model`` or nothing — page ids in
+           any table row must resolve to a resident page on EVERY shard.
+        """
+        from repro.serving.chaos import AuditError
+
+        checked = {"ptab_leaves": 0, "pool_leaves": 0}
+
+        def visit(path, leaf):
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", "?")))
+                            for p in path)
+            last = name.rsplit("/", 1)[-1]
+            if last == "ptab":
+                shards = list(leaf.addressable_shards)
+                ref = np.asarray(shards[0].data)
+                for s in shards[1:]:
+                    if not np.array_equal(np.asarray(s.data), ref):
+                        raise AuditError(
+                            f"audit: page table {name} diverges between "
+                            f"shard {shards[0].device} and {s.device}")
+                checked["ptab_leaves"] += 1
+            elif last in ("kp", "vp"):
+                spec = getattr(leaf.sharding, "spec", P())
+                axes = tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))
+                if axes[1] is not None:
+                    raise AuditError(
+                        f"audit: pool {name} shards its page axis "
+                        f"({axes[1]!r}) — global page ids would dangle")
+                head_ax = axes[3] if leaf.ndim == 5 else None
+                flat = head_ax if isinstance(head_ax, tuple) else (head_ax,)
+                if not set(flat) <= {None, "model"}:
+                    raise AuditError(
+                        f"audit: pool {name} head axis carries {head_ax!r} "
+                        "(only 'model' or replication is head-parallel)")
+                checked["pool_leaves"] += 1
+            return leaf
+
+        jax.tree_util.tree_map_with_path(visit, cache)
+        return checked
+
+
+class ShardedMonoBackend(_ShardedMixin, MonoBackend):
+    """Monolithic cache on a multi-device mesh (``cache_specs`` shards
+    KV heads / sequence per ``kv_mode``)."""
+
+
+class ShardedPagedBackend(_ShardedMixin, PagedBackend):
+    """Paged pool on a multi-device mesh: head-parallel page pool,
+    replicated page tables, unchanged host allocator."""
+
+    def pool_bytes_per_shard(self) -> int:
+        """Per-shard resident bytes of the KV pool (the head slice)."""
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self._ac)[0]:
+            last = SH._path_names(path)[-1] if path else ""
+            if last in ("kp", "vp"):
+                total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        kvh = kv_heads_per_shard(self.cfg, self.mesh)
+        hk = self.cfg.n_kv_heads or self.cfg.n_heads
+        return total * (kvh or hk) // hk
+
+
+def make_sharded_backend(cfg: ModelConfig, mesh: Mesh, scfg: ServeConfig,
+                         abstract_params: Any, abstract_draft: Any,
+                         abstract_cache: Any, stats: Dict[str, Any]):
+    kind = ShardedPagedBackend if scfg.paged else ShardedMonoBackend
+    return kind(cfg, mesh, scfg, abstract_params, abstract_draft,
+                abstract_cache, stats)

@@ -3,7 +3,15 @@ import sys
 
 # tests must see the real single CPU device (the 512-device override is
 # dryrun.py-private); keep any user XLA_FLAGS out of the picture.
-os.environ.pop("XLA_FLAGS", None)
+# Exception: REPRO_TEST_DEVICES=N (the sharded-smoke CI job) forces an
+# N-way simulated host platform so the tensor-parallel serving tests run
+# on a real multi-device mesh.
+_n_dev = os.environ.get("REPRO_TEST_DEVICES")
+if _n_dev:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={int(_n_dev)}")
+else:
+    os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 

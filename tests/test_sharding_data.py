@@ -111,6 +111,51 @@ class TestCacheSpecs:
         specs = SH.cache_specs(cache, cfg, mesh)
         assert SH.validate_specs(cache, specs, mesh) == []
 
+    def test_forced_modes(self):
+        """Each forced kv_mode puts "model" exactly where it promises:
+        nowhere (batch), the head axis (heads), the sequence (seq)."""
+        cfg = C.get("gemma2-27b")                  # kv=16 divides 16
+        mesh = abstract_mesh()
+        cache = jax.eval_shape(lambda: MZ.init_cache(cfg, 128, 1024))
+        b = SH.cache_specs(cache, cfg, mesh, kv_mode="batch")["k"]
+        assert b[1] == "data" and b[2] is None and b[3] is None
+        h = SH.cache_specs(cache, cfg, mesh, kv_mode="heads")["k"]
+        assert h[3] == "model" and h[2] is None
+        s = SH.cache_specs(cache, cfg, mesh, kv_mode="seq")["k"]
+        assert s[2] == "model" and s[3] is None
+
+    def test_invalid_mode_raises(self):
+        cfg = C.get("gemma2-27b")
+        cache = jax.eval_shape(lambda: MZ.init_cache(cfg, 8, 64))
+        with pytest.raises(ValueError, match="kv_mode"):
+            SH.cache_specs(cache, cfg, abstract_mesh(), kv_mode="rows")
+
+    @pytest.mark.parametrize("mode", ["batch", "heads", "seq"])
+    @pytest.mark.parametrize("arch", C.list_archs())
+    def test_forced_modes_valid_zoo(self, arch, mode):
+        """best_effort keeps every forced mode compiling on every arch:
+        a non-dividing axis is dropped (replicated), never an error."""
+        cfg = C.get(arch)
+        mesh = abstract_mesh()
+        src_len = 1024 if cfg.is_encoder_decoder else None
+        cache = jax.eval_shape(
+            lambda: MZ.init_cache(cfg, 128, 1024, src_len=src_len))
+        specs = SH.cache_specs(cache, cfg, mesh, kv_mode=mode)
+        assert SH.validate_specs(cache, specs, mesh) == []
+
+    def test_paged_pool_head_parallel(self):
+        """Paged pools shard KV heads (never pages); tables replicate —
+        the invariant serving/sharded.py's per-shard audit enforces."""
+        cfg = C.get("gemma2-27b")
+        mesh = abstract_mesh()
+        cache = jax.eval_shape(
+            lambda: MZ.init_cache(cfg, 8, 256, page_size=16,
+                                  num_pages=128))
+        specs = SH.cache_specs(cache, cfg, mesh)
+        assert specs["kp"][1] is None and specs["kp"][3] == "model"
+        assert specs["ptab"] == P(None, None, None)
+        assert SH.validate_specs(cache, specs, mesh) == []
+
 
 class TestDataPipeline:
     def test_deterministic(self):
